@@ -1,0 +1,33 @@
+"""GAE lowering comparison (serial scan vs associative): wall time at LM
+trajectory lengths — the §Perf rationale for associative_gae."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.algos.pg.gae import gae_scan, gae_associative
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    for T, B in [(512, 32), (4096, 16)]:
+        ks = jax.random.split(rng, 4)
+        rew = jax.random.normal(ks[0], (T, B))
+        val = jax.random.normal(ks[1], (T, B))
+        boot = jax.random.normal(ks[2], (B,))
+        done = jax.random.uniform(ks[3], (T, B)) < 0.02
+        for name, fn in [("scan", gae_scan), ("associative", gae_associative)]:
+            f = jax.jit(lambda r, v, bo, d, fn=fn: fn(r, v, bo, d)[0])
+            f(rew, val, boot, done).block_until_ready()
+            t0 = time.perf_counter()
+            for _ in range(20):
+                out = f(rew, val, boot, done)
+            out.block_until_ready()
+            us = (time.perf_counter() - t0) / 20 * 1e6
+            rows.append({"name": f"gae_{name}_T{T}_B{B}",
+                         "us_per_call": round(us, 1),
+                         "derived": f"{T*B/us:.1f}_Mtok_per_sec"})
+    return rows

@@ -1,0 +1,113 @@
+"""Learning-curve benches (paper Figs 4-6 at CPU scale): one short run per
+algorithm family; curves land in benchmarks/curves/*.csv, the CSV row
+reports final average return.  Budgets are deliberately small — these are
+the exercise-every-algorithm benches, not score chasing."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs import make_env
+from repro.agents import (make_categorical_pg_agent, make_dqn_agent,
+                          make_sac_agent, make_ddpg_agent)
+from repro.algos import PPO, A2C, DQN, SAC, TD3, DDPG
+from repro.core.distributions import Categorical
+from repro.models.rl_models import (make_pg_mlp, make_q_conv, make_sac_actor,
+                                    make_ddpg_actor, make_q_critic)
+from repro.samplers import SerialSampler
+from repro.runners import OnPolicyRunner, OffPolicyRunner
+from repro.train.optim import adam
+from repro.utils.logger import Logger
+
+CURVE_DIR = os.path.join(os.path.dirname(__file__), "curves")
+
+
+def _curve_logger(name):
+    return Logger(CURVE_DIR, filename=f"{name}.csv",
+                  stream=open(os.devnull, "w"))
+
+
+def _final_return(sampler, params, state):
+    state = sampler.reset_stats(state)
+    for _ in range(3):
+        state, _ = jax.jit(sampler.collect)(params, state)
+    return float(sampler.traj_stats(state)["avg_return"])
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+
+    # --- Fig 5 analogue: policy gradient on discrete control ---------------
+    for name, algo_cls, kw in [
+            ("ppo", PPO, dict(epochs=4, minibatches=4)),
+            ("a2c", A2C, dict())]:
+        env = make_env("cartpole")
+        model = make_pg_mlp(4, 2)
+        agent = make_categorical_pg_agent(model)
+        algo = algo_cls(model.apply, adam(7e-4, grad_clip=0.5),
+                        distribution=Categorical(2), entropy_coeff=0.01, **kw)
+        sampler = SerialSampler(env, agent, n_envs=16, horizon=64)
+        runner = OnPolicyRunner(sampler, algo, n_iterations=40,
+                                log_interval=10,
+                                logger=_curve_logger(f"{name}_cartpole"))
+        ts, ss, _ = runner.run(rng)
+        ret = _final_return(sampler, ts.params, ss)
+        rows.append({"name": f"learn_{name}_cartpole",
+                     "us_per_call": 0, "derived": f"return_{ret:.0f}"})
+
+    # --- Fig 6 analogue: DQN variants on vision (catch) ---------------------
+    for name, kw in [("dqn", dict()),
+                     ("double_dueling", dict(dueling=True)),
+                     ("c51", dict(n_atoms=21))]:
+        env = make_env("catch")
+        n_atoms = kw.pop("n_atoms", 0)
+        dueling = kw.pop("dueling", False)
+        model = make_q_conv(1, 3, img_hw=(10, 5), channels=(16, 32),
+                            kernels=(3, 3), strides=(1, 1), d_out=128,
+                            dueling=dueling, n_atoms=n_atoms)
+        agent = make_dqn_agent(model, 3, n_atoms=n_atoms, v_min=-1, v_max=1)
+        algo = DQN(model.apply, adam(5e-4), gamma=0.99, double=True,
+                   n_atoms=n_atoms, v_min=-1, v_max=1,
+                   target_update_interval=100)
+        sampler = SerialSampler(env, agent, n_envs=16, horizon=16)
+        runner = OffPolicyRunner(
+            sampler, algo, replay_capacity=8192, batch_size=64,
+            n_iterations=60, updates_per_collect=2, min_replay=512,
+            prioritized=True, log_interval=15,
+            logger=_curve_logger(f"{name}_catch"),
+            agent_state_kwargs={"epsilon": 0.2})
+        ts, ss, _ = runner.run(rng)
+        ss = ss._replace(agent_state={"epsilon": jnp.zeros(16)})
+        ret = _final_return(sampler, ts.params, ss)
+        rows.append({"name": f"learn_{name}_catch",
+                     "us_per_call": 0, "derived": f"return_{ret:.2f}"})
+
+    # --- Fig 4 analogue: continuous control (pendulum) ----------------------
+    env = make_env("pendulum")
+    for name in ("sac", "td3", "ddpg"):
+        k1, rng = jax.random.split(rng)
+        critic = make_q_critic(3, 1, hidden=(64, 64))
+        if name == "sac":
+            actor = make_sac_actor(3, 1, hidden=(64, 64))
+            agent = make_sac_agent(actor, 1)
+            algo = SAC(actor.apply, critic.apply, adam(1e-3), adam(1e-3),
+                       act_dim=1)
+        else:
+            actor = make_ddpg_actor(3, 1, hidden=(64, 64))
+            agent = make_ddpg_agent(actor, 1, expl_noise=0.1)
+            cls = TD3 if name == "td3" else DDPG
+            algo = cls(actor.apply, critic.apply, adam(1e-3), adam(1e-3))
+        params = {"actor": actor.init(k1), "critic": critic.init(k1)}
+        sampler = SerialSampler(env, agent, n_envs=8, horizon=32)
+        runner = OffPolicyRunner(
+            sampler, algo, replay_capacity=16384, batch_size=128,
+            n_iterations=50, updates_per_collect=4, min_replay=1024,
+            log_interval=10, logger=_curve_logger(f"{name}_pendulum"))
+        ts, ss, _ = runner.run(rng, params=params)
+        ret = _final_return(sampler, ts.params, ss)
+        rows.append({"name": f"learn_{name}_pendulum",
+                     "us_per_call": 0, "derived": f"return_{ret:.0f}"})
+    return rows

@@ -1,0 +1,61 @@
+"""R2D1 pipeline bench (paper Fig 7/8 + the 16k SPS claim, CPU scale):
+asynchronous runner + alternating sampler + prioritized sequence replay with
+stored recurrent state — end to end, reporting SPS and the actual replay
+ratio the throttle holds."""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.envs import make_env
+from repro.agents import make_r2d1_agent
+from repro.algos import R2D1
+from repro.models.rl_models import make_recurrent_q
+from repro.samplers import AlternatingSampler
+from repro.runners import AsyncR2D1Runner
+from repro.replay.host import SequenceSamples, SequenceReplayBuffer
+from repro.train.optim import adam
+from repro.utils.logger import Logger
+
+CURVE_DIR = os.path.join(os.path.dirname(__file__), "curves")
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    env = make_env("catch")
+    d_lstm = 64
+    model = make_recurrent_q(1, 3, conv=True, img_hw=(10, 5), d_lstm=d_lstm,
+                             channels=(16, 32), kernels=(3, 3), strides=(1, 1),
+                             d_conv_out=128)
+    agent = make_r2d1_agent(model, 3)
+    algo = R2D1(model.apply, adam(5e-4), burn_in=4, n_step=2, gamma=0.99,
+                target_update_interval=200)
+    sampler = AlternatingSampler(env, agent, n_envs=16, horizon=8)
+    obs0 = np.zeros((10, 5, 1), np.float32)
+    st0 = (np.zeros((d_lstm,), np.float32), np.zeros((d_lstm,), np.float32))
+    example = SequenceSamples(observation=obs0, prev_action=np.int32(0),
+                              prev_reward=np.float32(0), action=np.int32(0),
+                              reward=np.float32(0), done=False, init_state=st0)
+    buffer = SequenceReplayBuffer(example, T_size=1024, B=16, seq_len=16,
+                                  burn_in=4, state_interval=8)
+    runner = AsyncR2D1Runner(
+        sampler, algo, buffer, batch_size=16, replay_ratio=2.0,
+        min_replay=256, n_iterations=50, log_interval=10,
+        logger=Logger(CURVE_DIR, filename="r2d1_catch.csv",
+                      stream=open(os.devnull, "w")),
+        agent_state_kwargs={"epsilon": 0.2})
+    t0 = time.time()
+    ts, ss, info = runner.run(rng)
+    dt = time.time() - t0
+    sps = 50 * 16 * 8 / dt
+    ss = AlternatingSampler.reset_stats(ss)
+    for _ in range(4):
+        ss, _ = jax.jit(sampler.collect)(ts.params, ss)
+    ret = float(AlternatingSampler.traj_stats(ss)["avg_return"])
+    return [{"name": "r2d1_async_alternating_catch",
+             "us_per_call": round(dt / 50 * 1e6, 1),
+             "derived": f"{sps:.0f}_sps_return_{ret:.2f}"}]

@@ -1,0 +1,69 @@
+"""Replay machinery throughput (the paper's buffer options §1.1): host
+sum-tree sampling, device-functional replay, and the blocked-priority kernel
+vs the numpy tree."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.replay.sum_tree import SumTree
+from repro.replay import device as dreplay
+from repro.kernels.sum_tree import init_priorities, set_priorities
+from repro.kernels.sum_tree.sum_tree import sample_pallas
+
+
+def _timeit(fn, iters=20):
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rows = []
+    cap, batch = 2**16, 256
+    pr = np.random.rand(cap) + 0.01
+
+    host = SumTree(cap)
+    host.set(np.arange(cap), pr)
+    rng_np = np.random.default_rng(0)
+    us = _timeit(lambda: host.sample(batch, rng_np))
+    rows.append({"name": f"host_sumtree_sample_{cap}x{batch}",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{batch/us*1e6:.0f}_samples_per_sec"})
+
+    us = _timeit(lambda: host.set(
+        rng_np.integers(0, cap, batch), np.random.rand(batch)))
+    rows.append({"name": f"host_sumtree_update_{cap}x{batch}",
+                 "us_per_call": round(us, 1), "derived": ""})
+
+    st = init_priorities(cap, 512)
+    st = set_priorities(st, jnp.arange(cap), jnp.asarray(pr))
+    u = jnp.linspace(0.0, float(np.sum(pr)) * 0.999, batch)
+    f = jax.jit(lambda: sample_pallas(st.leaves, st.block_sums, u,
+                                      block_b=batch)[0])
+    us = _timeit(f)
+    rows.append({"name": f"kernel_blocked_sample_{cap}x{batch}(interp)",
+                 "us_per_call": round(us, 1),
+                 "derived": "interpret_mode_cpu"})
+
+    ex = {"o": jnp.zeros(16), "r": jnp.zeros(())}
+    state = dreplay.init_replay(ex, cap)
+    batch_tr = {"o": jnp.ones((256, 16)), "r": jnp.ones(256)}
+    ins = jax.jit(dreplay.insert)
+    state = ins(state, batch_tr)
+    us = _timeit(lambda: ins(state, batch_tr).cursor)
+    rows.append({"name": "device_replay_insert_256", "us_per_call": round(us, 1),
+                 "derived": ""})
+    k = jax.random.PRNGKey(0)
+    smp = jax.jit(lambda s, k: dreplay.sample(s, k, 256)[1])
+    us = _timeit(lambda: smp(state, k))
+    rows.append({"name": "device_replay_sample_256_prioritized",
+                 "us_per_call": round(us, 1), "derived": ""})
+    return rows

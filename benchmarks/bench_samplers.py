@@ -1,0 +1,59 @@
+"""Sampler throughput (paper §2.1 / Fig 1 + the §3.2 SPS claim): steps/sec
+for serial vs alternating sampling with batched action selection, and scaling
+with the env batch."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.envs import make_env
+from repro.agents import make_categorical_pg_agent, make_dqn_agent
+from repro.models.rl_models import make_pg_mlp, make_q_conv
+from repro.samplers import SerialSampler, AlternatingSampler
+
+
+def _time_sampler(sampler, params, state, iters=5):
+    collect = jax.jit(sampler.collect)
+    state, batch = collect(params, state)  # compile
+    jax.block_until_ready(batch.reward)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        state, batch = collect(params, state)
+    jax.block_until_ready(batch.reward)
+    dt = (time.perf_counter() - t0) / iters
+    sps = sampler.n_envs * sampler.horizon / dt
+    return dt * 1e6, sps
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    params = model.init(rng)
+    for n_envs in (8, 32, 128):
+        s = SerialSampler(env, agent, n_envs=n_envs, horizon=32)
+        us, sps = _time_sampler(s, params, s.init(rng))
+        rows.append({"name": f"serial_cartpole_B{n_envs}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"{sps:.0f}_steps_per_sec"})
+    s = AlternatingSampler(env, agent, n_envs=32, horizon=32)
+    us, sps = _time_sampler(s, params, s.init(rng))
+    rows.append({"name": "alternating_cartpole_B32",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{sps:.0f}_steps_per_sec"})
+
+    env = make_env("catch")
+    qmodel = make_q_conv(1, 3, img_hw=(10, 5), channels=(16, 32),
+                         kernels=(3, 3), strides=(1, 1), d_out=128)
+    qagent = make_dqn_agent(qmodel, 3)
+    qparams = qmodel.init(rng)
+    s = SerialSampler(env, qagent, n_envs=32, horizon=16)
+    st = s.init(rng, {"epsilon": 0.1})
+    us, sps = _time_sampler(s, qparams, st)
+    rows.append({"name": "serial_catch_vision_B32",
+                 "us_per_call": round(us, 1),
+                 "derived": f"{sps:.0f}_steps_per_sec"})
+    return rows

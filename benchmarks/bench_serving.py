@@ -1,0 +1,36 @@
+"""Batched action-selection / decode throughput (paper Fig 1 center/right at
+LM scale): tokens/sec for prefill+decode on smoke backbones — one row per
+family exercising every cache type."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import backbones as bb
+from repro.launch.serve import make_generate
+
+
+def run():
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    for arch in ("mamba2-1.3b", "glm4-9b", "mixtral-8x7b", "gemma2-2b",
+                 "zamba2-7b", "whisper-medium"):
+        cfg = get_smoke_config(arch)
+        params = bb.init_lm(rng, cfg)
+        B, P, G = 8, 32, 16
+        gen = make_generate(cfg, B, P, G)
+        prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab)
+        toks = gen(params, prompts, rng)
+        jax.block_until_ready(toks)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            toks = gen(params, prompts, rng)
+        jax.block_until_ready(toks)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append({"name": f"decode_{arch}_B{B}x{G}",
+                     "us_per_call": round(us, 1),
+                     "derived": f"{B*G/us*1e6:.0f}_tok_per_sec_smoke_cpu"})
+    return rows

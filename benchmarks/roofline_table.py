@@ -1,0 +1,86 @@
+"""Aggregate dry-run JSONs into the §Roofline markdown table.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [results_dir]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.configs import ARCH_IDS, skipped_cells
+from repro.models.config import SHAPES
+
+
+def load(results_dir):
+    out = {}
+    for fn in sorted(os.listdir(results_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(results_dir, fn)) as f:
+            d = json.load(f)
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    return f"{x:.2e}"
+
+
+def roofline_markdown(results_dir="benchmarks/dryrun_results"):
+    data = load(results_dir)
+    lines = [
+        "| arch | shape | dominant | t_compute | t_memory | t_collective | "
+        "useful (6ND/HLO) | peak GiB/dev | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for aid in ARCH_IDS:
+        for cell in SHAPES:
+            key = (aid, cell.name, "16x16")
+            if key not in data:
+                if any(c.name == cell.name for c in skipped_cells(aid)):
+                    lines.append(
+                        f"| {aid} | {cell.name} | SKIP | — | — | — | — | — | "
+                        f"full attention: 524k dense KV excluded |")
+                continue
+            d = data[key]
+            r = d["roofline"]
+            peak = (d["memory"]["peak_bytes"] or 0) / 2**30
+            useful = d.get("useful_flops_ratio")
+            lines.append(
+                f"| {aid} | {cell.name} | **{r['bottleneck']}** | "
+                f"{fmt_s(r['t_compute_s'])} | {fmt_s(r['t_memory_s'])} | "
+                f"{fmt_s(r['t_collective_s'])} | "
+                f"{useful:.2f} | {peak:.2f} | |")
+    return "\n".join(lines)
+
+
+def dryrun_markdown(results_dir="benchmarks/dryrun_results"):
+    data = load(results_dir)
+    lines = [
+        "| arch | shape | mesh | compile s | peak GiB/dev | arg GiB/dev |",
+        "|---|---|---|---|---|---|",
+    ]
+    for aid in ARCH_IDS:
+        for cell in SHAPES:
+            for mesh in ("16x16", "2x16x16"):
+                key = (aid, cell.name, mesh)
+                if key not in data:
+                    continue
+                d = data[key]
+                peak = (d["memory"]["peak_bytes"] or 0) / 2**30
+                arg = (d["memory"]["argument_bytes"] or 0) / 2**30
+                lines.append(
+                    f"| {aid} | {cell.name} | {mesh} | {d['t_compile_s']} | "
+                    f"{peak:.2f} | {arg:.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/dryrun_results"
+    print("## Roofline (single-pod 16x16, per-device terms)\n")
+    print(roofline_markdown(d))
+    print("\n## Dry-run memory/compile (both meshes)\n")
+    print(dryrun_markdown(d))

@@ -1,0 +1,17 @@
+"""End-to-end LM-policy RL (DESIGN.md §3): PPO over the token MDP where
+batched action selection IS LM decoding — thin wrapper over the production
+driver repro.launch.train with a 4-layer (~10M) gemma2-family model.
+
+  PYTHONPATH=src python examples/lm_ppo_end2end.py
+  PYTHONPATH=src python examples/lm_ppo_end2end.py --arch zamba2-7b --steps 200
+"""
+import sys
+
+from repro.launch import train
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "gemma2-2b", "--steps", "150",
+                            "--batch", "32", "--horizon", "32",
+                            "--lr", "1e-3"]
+    train.main(argv)

@@ -1,0 +1,32 @@
+"""Quickstart: PPO on CartPole in ~30 lines — the paper's serial-mode
+debugging workflow (§2.4: "serial mode will be easiest for debugging").
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.envs import make_env
+from repro.agents import make_categorical_pg_agent
+from repro.algos import PPO
+from repro.core.distributions import Categorical
+from repro.models.rl_models import make_pg_mlp
+from repro.samplers import SerialSampler
+from repro.runners import OnPolicyRunner
+from repro.train.optim import adam
+
+
+def main():
+    env = make_env("cartpole")
+    model = make_pg_mlp(obs_dim=4, n_actions=2)
+    agent = make_categorical_pg_agent(model)
+    algo = PPO(model.apply, adam(7e-4, grad_clip=0.5),
+               distribution=Categorical(2), epochs=4, minibatches=4)
+    sampler = SerialSampler(env, agent, n_envs=16, horizon=64)
+    runner = OnPolicyRunner(sampler, algo, n_iterations=50, log_interval=10)
+    train_state, sampler_state, _ = runner.run(jax.random.PRNGKey(0))
+    print("final stats:", {k: float(v) for k, v in
+                           sampler.traj_stats(sampler_state).items()})
+
+
+if __name__ == "__main__":
+    main()

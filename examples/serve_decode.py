@@ -1,0 +1,14 @@
+"""Batched serving (paper Fig 1 right, at LM scale): prefill + decode over
+request batches; every backbone family selectable.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch mixtral-8x7b --gen 64
+"""
+import sys
+
+from repro.launch import serve
+
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or ["--arch", "mixtral-8x7b", "--batch", "8",
+                            "--prompt-len", "64", "--gen", "32"]
+    serve.main(argv)

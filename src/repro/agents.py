@@ -1,0 +1,143 @@
+"""Concrete agents (paper §6.1): model + distribution -> step function.
+
+An agent step is a pure function
+    step(params, rng, obs, prev_action, prev_reward, state)
+        -> (action, agent_info dict, new_state)
+usable inside ``lax.scan`` rollouts (serial sampler), ``shard_map`` (parallel
+sampler) and pjit serving — the same code path everywhere, which is the
+paper's central infrastructure claim.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .core.distributions import Categorical, Gaussian, SquashedGaussian, EpsilonGreedy
+
+F32 = jnp.float32
+
+
+class AgentDef(NamedTuple):
+    init_params: Callable          # rng -> params
+    step: Callable                 # (params, rng, obs, pa, pr, state) -> (a, info, state)
+    value: Callable                # (params, obs, pa, pr, state) -> value (bootstrap)
+    initial_state: Callable        # batch -> state (None for feed-forward)
+    recurrent: bool = False
+
+
+def make_categorical_pg_agent(model) -> AgentDef:
+    """A2C/PPO agent over Discrete actions; info: logp, value, logits."""
+    dist = Categorical(dim=None)
+
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        logits, value = model.apply(params, obs, prev_action, prev_reward)
+        action = dist.sample(rng, logits)
+        logp = dist.log_likelihood(action, logits)
+        return action, {"logp": logp, "value": value}, state
+
+    def value(params, obs, prev_action, prev_reward, state):
+        _, v = model.apply(params, obs, prev_action, prev_reward)
+        return v
+
+    return AgentDef(model.init, step, value, model.initial_state)
+
+
+def make_gaussian_pg_agent(model, act_dim: int) -> AgentDef:
+    """PPO-continuous agent (state obs)."""
+    dist = Gaussian(act_dim)
+
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        (mean, log_std), value = model.apply(params, obs, prev_action, prev_reward)
+        action = dist.sample(rng, mean, log_std)
+        logp = dist.log_likelihood(action, mean, log_std)
+        return action, {"logp": logp, "value": value}, state
+
+    def value(params, obs, prev_action, prev_reward, state):
+        _, v = model.apply(params, obs, prev_action, prev_reward)
+        return v
+
+    return AgentDef(model.init, step, value, model.initial_state)
+
+
+def make_dqn_agent(model, n_actions: int, *, n_atoms: int = 0,
+                   v_min=-10.0, v_max=10.0) -> AgentDef:
+    """Epsilon-greedy DQN agent; epsilon passed per-step via agent_info-less
+    closure state (vector epsilon supported, Ape-X style)."""
+    eg = EpsilonGreedy(n_actions)
+    support = jnp.linspace(v_min, v_max, n_atoms) if n_atoms else None
+
+    def q_values(params, obs, prev_action, prev_reward):
+        q = model.apply(params, obs, prev_action, prev_reward)
+        if n_atoms:
+            q = jnp.sum(jax.nn.softmax(q, axis=-1) * support, axis=-1)
+        return q
+
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        """state: dict with 'epsilon' scalar or (B,) vector."""
+        q = q_values(params, obs, prev_action, prev_reward)
+        action = eg.sample(rng, q, state["epsilon"])
+        return action, {"q": q}, state
+
+    def value(params, obs, prev_action, prev_reward, state):
+        return jnp.max(q_values(params, obs, prev_action, prev_reward), axis=-1)
+
+    def initial_state(batch, epsilon=0.05):
+        return {"epsilon": jnp.full((batch,), epsilon, F32)}
+
+    return AgentDef(model.init, step, value, initial_state)
+
+
+def make_r2d1_agent(model, n_actions: int) -> AgentDef:
+    """Recurrent epsilon-greedy agent: carries LSTM state (paper §6.3);
+    model.apply is time-major — the sampler feeds T=1 slices."""
+    eg = EpsilonGreedy(n_actions)
+
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        q, lstm_state = model.apply(params, obs[None], prev_action[None],
+                                    prev_reward[None], state["lstm"])
+        q = q[0]
+        action = eg.sample(rng, q, state["epsilon"])
+        return action, {"q": q}, {"lstm": lstm_state, "epsilon": state["epsilon"]}
+
+    def value(params, obs, prev_action, prev_reward, state):
+        q, _ = model.apply(params, obs[None], prev_action[None],
+                           prev_reward[None], state["lstm"])
+        return jnp.max(q[0], axis=-1)
+
+    def initial_state(batch, epsilon=0.05):
+        return {"lstm": model.initial_state(batch),
+                "epsilon": jnp.full((batch,), epsilon, F32)}
+
+    return AgentDef(model.init, step, value, initial_state, recurrent=True)
+
+
+def make_ddpg_agent(actor_model, act_dim: int, *, expl_noise=0.1) -> AgentDef:
+    """params may be the combined {"actor","critic"} dict from the algo."""
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        p = params["actor"] if isinstance(params, dict) and "actor" in params else params
+        mu = actor_model.apply(p, obs)
+        noise = expl_noise * jax.random.normal(rng, mu.shape)
+        action = jnp.clip(mu + noise, -1.0, 1.0)
+        return action, {}, state
+
+    def value(params, obs, prev_action, prev_reward, state):
+        raise NotImplementedError("QPG agents bootstrap via critic in the algo")
+
+    return AgentDef(actor_model.init, step, value, actor_model.initial_state)
+
+
+def make_sac_agent(actor_model, act_dim: int) -> AgentDef:
+    dist = SquashedGaussian(act_dim)
+
+    def step(params, rng, obs, prev_action, prev_reward, state):
+        p = params["actor"] if isinstance(params, dict) and "actor" in params else params
+        mean, log_std = actor_model.apply(p, obs)
+        action, logp = dist.sample_with_logprob(rng, mean, log_std)
+        return action, {"logp": logp}, state
+
+    def value(params, obs, prev_action, prev_reward, state):
+        raise NotImplementedError("QPG agents bootstrap via critic in the algo")
+
+    return AgentDef(actor_model.init, step, value, actor_model.initial_state)

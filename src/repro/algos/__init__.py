@@ -1,0 +1,11 @@
+"""The three model-free families on one substrate (the paper's thesis):
+policy gradient (A2C, PPO), deep Q-learning (DQN + variants, R2D1), and
+Q-value policy gradient (DDPG, TD3, SAC)."""
+from .pg.gae import gae_scan, gae_associative, discounted_returns
+from .pg.a2c import A2C
+from .pg.ppo import PPO
+from .dqn.dqn import DQN
+from .dqn.r2d1 import R2D1, value_rescale, value_rescale_inv
+from .qpg.ddpg import DDPG
+from .qpg.td3 import TD3
+from .qpg.sac import SAC

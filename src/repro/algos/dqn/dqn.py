@@ -1,0 +1,127 @@
+"""DQN + variants on one loss (paper §1.1): Double, Dueling (model-level),
+Categorical/C51, prioritized replay hooks, n-step returns — Rainbow minus
+NoisyNets = double+dueling+categorical+prioritized+n-step, as in the paper.
+
+Pure functions over (params, target_params); the replay buffer supplies
+n-step returns and bootstrap masks (time-limit aware).  ``td_abs`` is
+returned for priority updates.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...train.optim import Optimizer
+
+F32 = jnp.float32
+
+
+def huber(x, delta: float = 1.0):
+    a = jnp.abs(x)
+    return jnp.where(a <= delta, 0.5 * x * x, delta * (a - 0.5 * delta))
+
+
+class DQN:
+    def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
+                 gamma=0.99, n_step=1, double=True,
+                 n_atoms: int = 0, v_min: float = -10.0, v_max: float = 10.0,
+                 target_update_interval: int = 250, huber_delta: float = 1.0):
+        self.apply = apply_fn          # (params, obs, prev_a, prev_r) -> q or logits
+        self.opt = optimizer
+        self.gamma, self.n_step = gamma, n_step
+        self.double = double
+        self.n_atoms = n_atoms
+        if n_atoms:
+            self.support = jnp.linspace(v_min, v_max, n_atoms)
+            self.v_min, self.v_max = v_min, v_max
+        self.target_interval = target_update_interval
+        self.delta = huber_delta
+
+    def init_train_state(self, rng, params) -> TrainState:
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=self.opt.init(params),
+                          extra={"target": params})
+
+    # ------------------------------------------------------------------
+    def _q(self, params, obs):
+        return self.apply(params, obs, None, None)
+
+    def loss(self, params, target_params, batch):
+        if self.n_atoms:
+            return self._c51_loss(params, target_params, batch)
+        q = self._q(params, batch["observation"])
+        qa = jnp.take_along_axis(q, batch["action"][..., None].astype(jnp.int32),
+                                 axis=-1)[..., 0]
+        q_next_t = self._q(target_params, batch["next_observation"])
+        if self.double:
+            q_next_o = self._q(params, batch["next_observation"])
+            a_star = jnp.argmax(q_next_o, axis=-1)
+        else:
+            a_star = jnp.argmax(q_next_t, axis=-1)
+        v_next = jnp.take_along_axis(q_next_t, a_star[..., None], axis=-1)[..., 0]
+        disc = self.gamma ** batch["n_used"].astype(F32)
+        target = batch["return_"] + disc * batch["bootstrap"] * v_next
+        td = qa - jax.lax.stop_gradient(target)
+        loss = jnp.mean(batch["is_weights"] * huber(td, self.delta))
+        return loss, {"td_abs": jnp.abs(td), "q_mean": jnp.mean(qa)}
+
+    def _c51_loss(self, params, target_params, batch):
+        """Categorical DQN with the Bellman projection onto the fixed support."""
+        nA = self.n_atoms
+        logits = self._q(params, batch["observation"])  # (B, A, atoms)
+        a = batch["action"].astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        logp_a = jnp.take_along_axis(
+            logp, a[..., None, None].repeat(nA, -1), axis=-2)[..., 0, :]  # (B, atoms)
+
+        t_logits = self._q(target_params, batch["next_observation"])
+        t_probs = jax.nn.softmax(t_logits, axis=-1)  # (B, A, atoms)
+        t_qvals = jnp.sum(t_probs * self.support, axis=-1)  # (B, A)
+        if self.double:
+            o_logits = self._q(params, batch["next_observation"])
+            o_probs = jax.nn.softmax(o_logits, axis=-1)
+            a_star = jnp.argmax(jnp.sum(o_probs * self.support, axis=-1), axis=-1)
+        else:
+            a_star = jnp.argmax(t_qvals, axis=-1)
+        p_next = jnp.take_along_axis(
+            t_probs, a_star[..., None, None].repeat(nA, -1), axis=-2)[..., 0, :]
+
+        disc = (self.gamma ** batch["n_used"].astype(F32))[..., None]
+        tz = batch["return_"][..., None] + disc * batch["bootstrap"][..., None] * self.support
+        tz = jnp.clip(tz, self.v_min, self.v_max)
+        dz = (self.v_max - self.v_min) / (nA - 1)
+        b = (tz - self.v_min) / dz          # (B, atoms) fractional index
+        lo = jnp.floor(b).astype(jnp.int32)
+        hi = jnp.ceil(b).astype(jnp.int32)
+        # distribute probability mass (handles lo==hi)
+        eq = (lo == hi).astype(F32)
+        w_lo = (hi.astype(F32) - b) + eq
+        w_hi = b - lo.astype(F32)
+        m = jnp.zeros_like(p_next)
+        bidx = jnp.arange(p_next.shape[0])[:, None].repeat(nA, 1)
+        m = m.at[bidx, lo].add(p_next * w_lo)
+        m = m.at[bidx, jnp.clip(hi, 0, nA - 1)].add(p_next * w_hi)
+        m = jax.lax.stop_gradient(m)
+
+        ce = -jnp.sum(m * logp_a, axis=-1)
+        loss = jnp.mean(batch["is_weights"] * ce)
+        q_mean = jnp.mean(jnp.sum(jnp.exp(logp_a) * self.support, axis=-1))
+        return loss, {"td_abs": ce, "q_mean": q_mean}
+
+    # ------------------------------------------------------------------
+    def update(self, train_state: TrainState, batch, rng=None):
+        target = train_state.extra["target"]
+        (loss, aux), grads = jax.value_and_grad(self.loss, has_aux=True)(
+            train_state.params, target, batch)
+        params, opt_state, gnorm = self.opt.update(grads, train_state.opt_state,
+                                                   train_state.params)
+        step = train_state.step + 1
+        new_target = jax.tree_util.tree_map(
+            lambda t, p: jnp.where(step % self.target_interval == 0, p, t),
+            target, params)
+        ts = TrainState(step=step, params=params, opt_state=opt_state,
+                        extra={"target": new_target})
+        return ts, OptInfo(loss=loss, grad_norm=gnorm, extra=aux)

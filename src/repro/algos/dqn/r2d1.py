@@ -1,0 +1,131 @@
+"""R2D1 — non-distributed R2D2 (paper §3.2 headline result).
+
+Recurrent Q-learning from sequence replay:
+- burn-in: the first ``burn_in`` steps only advance the LSTM state (no loss);
+- stored recurrent state: sequences start at replay slots where the sampler
+  stored the state (periodic storage, paper §1.1 / §6.3);
+- value rescaling h(x) = sign(x)(sqrt(|x|+1)-1) + eps*x on targets (R2D2);
+- double Q + n-step targets within the sequence;
+- priorities: eta*max|td| + (1-eta)*mean|td| over the training segment.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...train.optim import Optimizer
+from .dqn import huber
+
+F32 = jnp.float32
+EPS_RESCALE = 1e-3
+
+
+def value_rescale(x, eps=EPS_RESCALE):
+    return jnp.sign(x) * (jnp.sqrt(jnp.abs(x) + 1.0) - 1.0) + eps * x
+
+
+def value_rescale_inv(x, eps=EPS_RESCALE):
+    return jnp.sign(x) * (
+        jnp.square((jnp.sqrt(1.0 + 4.0 * eps * (jnp.abs(x) + 1.0 + eps)) - 1.0)
+                   / (2.0 * eps)) - 1.0)
+
+
+class R2D1:
+    def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
+                 gamma=0.997, n_step=5, burn_in=40,
+                 target_update_interval=2500, eta=0.9, huber_delta=1.0,
+                 use_rescale=True):
+        self.apply = apply_fn  # (params, obs(T,B,..), prev_a, prev_r, state) -> (q, state)
+        self.opt = optimizer
+        self.gamma, self.n_step = gamma, n_step
+        self.burn_in = burn_in
+        self.target_interval = target_update_interval
+        self.eta = eta
+        self.delta = huber_delta
+        self.use_rescale = use_rescale
+
+    def init_train_state(self, rng, params) -> TrainState:
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=self.opt.init(params),
+                          extra={"target": params})
+
+    def loss(self, params, target_params, batch):
+        """batch["sequence"] leaves: (batch, L+1, ...) slot-major from the
+        sequence replay; init_state at the sequence start."""
+        seq = batch["sequence"]
+        # to time-major (L+1, batch, ...)
+        tm = lambda x: jnp.swapaxes(x, 0, 1)
+        obs = tm(seq.observation)
+        prev_a = tm(seq.prev_action)
+        prev_r = tm(seq.prev_reward)
+        action = tm(seq.action).astype(jnp.int32)
+        reward = tm(seq.reward)
+        done = tm(seq.done).astype(F32)
+        state0 = batch["init_state"]
+
+        Lp1 = obs.shape[0]
+        L = Lp1 - 1
+        bi, n = self.burn_in, self.n_step
+
+        # burn-in (no grad) to warm the recurrent state
+        if bi > 0:
+            burn = lambda x: x[:bi]
+            _, state_o = self.apply(params, burn(obs), burn(prev_a), burn(prev_r),
+                                    state0)
+            _, state_t = self.apply(target_params, burn(obs), burn(prev_a),
+                                    burn(prev_r), state0)
+            state_o = jax.lax.stop_gradient(state_o)
+            state_t = jax.lax.stop_gradient(state_t)
+        else:
+            state_o = state_t = state0
+
+        sl = lambda x: x[bi:]
+        q, _ = self.apply(params, sl(obs), sl(prev_a), sl(prev_r), state_o)
+        q_t, _ = self.apply(target_params, sl(obs), sl(prev_a), sl(prev_r), state_t)
+        T = q.shape[0] - 1  # training segment length (excl. bootstrap tail)
+        # but n-step targets need q at t+n: usable t in [0, T-n+1)
+        qa = jnp.take_along_axis(q, action[bi:][..., None], axis=-1)[..., 0]
+
+        # double-Q bootstrap value at every position
+        a_star = jnp.argmax(q, axis=-1)
+        v = jnp.take_along_axis(q_t, a_star[..., None], axis=-1)[..., 0]
+        if self.use_rescale:
+            v = value_rescale_inv(v)
+
+        # n-step return within the sequence: for t, G = sum gamma^i r_{t+i} +
+        # gamma^n * v_{t+n}, truncated at done.
+        r_seg = reward[bi:]
+        d_seg = done[bi:]
+        Tt = qa.shape[0] - n  # number of trainable positions
+        ret = jnp.zeros_like(qa[:Tt])
+        not_done = jnp.ones_like(qa[:Tt])
+        for i in range(n):
+            ret = ret + (self.gamma ** i) * r_seg[i:Tt + i] * not_done
+            not_done = not_done * (1.0 - d_seg[i:Tt + i])
+        target = ret + (self.gamma ** n) * not_done * v[n:Tt + n]
+        if self.use_rescale:
+            target = value_rescale(target)
+        td = qa[:Tt] - jax.lax.stop_gradient(target)
+        w = batch["is_weights"][None, :]
+        loss = jnp.mean(w * huber(td, self.delta))
+        td_abs = jnp.abs(td)
+        return loss, {"td_abs_max": jnp.max(td_abs, axis=0),
+                      "td_abs_mean": jnp.mean(td_abs, axis=0),
+                      "q_mean": jnp.mean(qa)}
+
+    def update(self, train_state: TrainState, batch, rng=None):
+        target = train_state.extra["target"]
+        (loss, aux), grads = jax.value_and_grad(self.loss, has_aux=True)(
+            train_state.params, target, batch)
+        params, opt_state, gnorm = self.opt.update(grads, train_state.opt_state,
+                                                   train_state.params)
+        step = train_state.step + 1
+        new_target = jax.tree_util.tree_map(
+            lambda t, p: jnp.where(step % self.target_interval == 0, p, t),
+            target, params)
+        ts = TrainState(step=step, params=params, opt_state=opt_state,
+                        extra={"target": new_target})
+        return ts, OptInfo(loss=loss, grad_norm=gnorm, extra=aux)

@@ -1,0 +1,58 @@
+"""A2C (paper §1.1 policy-gradient family): synchronous advantage actor-critic.
+
+Batch layout is time-major (T, B) from the sampler; one gradient step per
+sampled batch (the paper's A2C), GAE or n-step returns for advantages.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...train.optim import Optimizer
+from .gae import gae_scan
+
+F32 = jnp.float32
+
+
+class A2C:
+    def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
+                 distribution, gamma=0.99, gae_lambda=1.0,
+                 value_coeff=0.5, entropy_coeff=0.01,
+                 normalize_advantage=False):
+        self.apply = apply_fn          # (params, obs, prev_a, prev_r) -> (logits, value)
+        self.opt = optimizer
+        self.dist = distribution
+        self.gamma, self.lam = gamma, gae_lambda
+        self.vc, self.ec = value_coeff, entropy_coeff
+        self.norm_adv = normalize_advantage
+
+    def init_train_state(self, rng, params) -> TrainState:
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=self.opt.init(params), extra=None)
+
+    def loss(self, params, batch):
+        logits, value = self.apply(params, batch["observation"],
+                                   batch.get("prev_action"), batch.get("prev_reward"))
+        adv, ret = gae_scan(batch["reward"], jax.lax.stop_gradient(value),
+                            batch["bootstrap_value"], batch["done"],
+                            gamma=self.gamma, lam=self.lam)
+        if self.norm_adv:
+            adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        logp = self.dist.log_likelihood(batch["action"], logits)
+        pi_loss = -jnp.mean(logp * adv)
+        v_loss = 0.5 * jnp.mean(jnp.square(value - ret))
+        ent = jnp.mean(self.dist.entropy(logits))
+        total = pi_loss + self.vc * v_loss - self.ec * ent
+        return total, {"pi_loss": pi_loss, "v_loss": v_loss, "entropy": ent}
+
+    def update(self, train_state: TrainState, batch, rng=None):
+        (loss, aux), grads = jax.value_and_grad(self.loss, has_aux=True)(
+            train_state.params, batch)
+        params, opt_state, gnorm = self.opt.update(grads, train_state.opt_state,
+                                                   train_state.params)
+        ts = TrainState(step=train_state.step + 1, params=params,
+                        opt_state=opt_state, extra=None)
+        return ts, OptInfo(loss=loss, grad_norm=gnorm, extra=aux)

@@ -1,0 +1,71 @@
+"""Generalized advantage estimation, two lowerings:
+
+- ``gae_scan``: reverse ``lax.scan`` over time — O(T) depth, the reference.
+- ``gae_associative``: ``lax.associative_scan`` over the linear recurrence
+  adv_t = delta_t + c_t * adv_{t+1} (c_t = gamma*lambda*(1-done_t)) — O(log T)
+  depth, the lowering used for long-sequence LM batches where the serial
+  chain would dominate the step's critical path.
+
+Both operate time-major (T, B) per the paper's training layout (§6.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _deltas(rewards, values, bootstrap_value, done, gamma):
+    next_values = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    not_done = 1.0 - done.astype(values.dtype)
+    return rewards + gamma * next_values * not_done - values, not_done
+
+
+def gae_scan(rewards, values, bootstrap_value, done, *, gamma=0.99, lam=0.95):
+    """rewards/values/done: (T, B); bootstrap_value: (B,).  Returns (adv, ret)."""
+    deltas, not_done = _deltas(rewards, values, bootstrap_value, done, gamma)
+
+    def body(adv_next, x):
+        delta, nd = x
+        adv = delta + gamma * lam * nd * adv_next
+        return adv, adv
+
+    _, advs = jax.lax.scan(body, jnp.zeros_like(bootstrap_value),
+                           (deltas, not_done), reverse=True)
+    return advs, advs + values
+
+
+def gae_associative(rewards, values, bootstrap_value, done, *, gamma=0.99, lam=0.95):
+    """Same recurrence via associative_scan over affine-map composition.
+
+    adv_t = f_t(adv_{t+1}) with f_t(x) = b_t + a_t*x.  On the time-reversed
+    sequence r_i = f_{T-1-i}, adv_{T-1-i} = (r_i ∘ ... ∘ r_0)(0); the scan
+    operator is combine(x, y) = y ∘ x (x applied first):
+        a = a_y*a_x,  b = b_y + a_y*b_x.
+    O(log T) depth vs the O(T) serial chain of gae_scan.
+    """
+    deltas, not_done = _deltas(rewards, values, bootstrap_value, done, gamma)
+    a = gamma * lam * not_done
+    b = deltas
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, by + ay * bx
+
+    a_rev, b_rev = a[::-1], b[::-1]
+    _, adv_rev = jax.lax.associative_scan(combine, (a_rev, b_rev), axis=0)
+    advs = adv_rev[::-1]
+    return advs, advs + values
+
+
+def discounted_returns(rewards, bootstrap_value, done, *, gamma=0.99):
+    """n-step discounted return-to-go (A2C target)."""
+    not_done = 1.0 - done.astype(rewards.dtype)
+
+    def body(ret_next, x):
+        r, nd = x
+        ret = r + gamma * nd * ret_next
+        return ret, ret
+
+    _, rets = jax.lax.scan(body, bootstrap_value, (rewards, not_done), reverse=True)
+    return rets

@@ -1,0 +1,68 @@
+"""DDPG (paper §1.1 Q-value policy-gradient family).
+
+Deterministic actor mu(s), critic Q(s,a), Polyak target networks.  Batches
+come from the replay buffer with time-limit-aware bootstrap masks (paper
+footnote 3: bootstrap on timeout using the TRUE pre-reset next obs).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...train.optim import Optimizer, soft_update
+
+F32 = jnp.float32
+
+
+class DDPG:
+    def __init__(self, actor_fn: Callable, critic_fn: Callable,
+                 actor_opt: Optimizer, critic_opt: Optimizer, *,
+                 gamma=0.99, tau=0.005):
+        self.actor = actor_fn    # (params, obs) -> action in [-1,1]
+        self.critic = critic_fn  # (params, obs, act) -> (n_critics, B)
+        self.actor_opt, self.critic_opt = actor_opt, critic_opt
+        self.gamma, self.tau = gamma, tau
+
+    def init_train_state(self, rng, params) -> TrainState:
+        """params: {"actor": ..., "critic": ...}"""
+        return TrainState(
+            step=jnp.zeros((), jnp.int32), params=params,
+            opt_state={"actor": self.actor_opt.init(params["actor"]),
+                       "critic": self.critic_opt.init(params["critic"])},
+            extra={"target": params})
+
+    def critic_loss(self, critic_params, target, batch):
+        a_next = self.actor(target["actor"], batch["next_observation"])
+        q_next = self.critic(target["critic"], batch["next_observation"], a_next)
+        v_next = q_next[0]  # single critic for DDPG
+        disc = self.gamma ** batch["n_used"].astype(F32)
+        y = batch["return_"] + disc * batch["bootstrap"] * v_next
+        q = self.critic(critic_params, batch["observation"], batch["action"])[0]
+        td = q - jax.lax.stop_gradient(y)
+        return jnp.mean(batch["is_weights"] * jnp.square(td)), jnp.abs(td)
+
+    def actor_loss(self, actor_params, critic_params, batch):
+        a = self.actor(actor_params, batch["observation"])
+        q = self.critic(critic_params, batch["observation"], a)[0]
+        return -jnp.mean(q)
+
+    def update(self, train_state: TrainState, batch, rng=None):
+        p, targ = train_state.params, train_state.extra["target"]
+        (c_loss, td_abs), c_grads = jax.value_and_grad(
+            self.critic_loss, has_aux=True)(p["critic"], targ, batch)
+        critic, c_opt, c_gnorm = self.critic_opt.update(
+            c_grads, train_state.opt_state["critic"], p["critic"])
+        a_loss, a_grads = jax.value_and_grad(self.actor_loss)(
+            p["actor"], critic, batch)
+        actor, a_opt, a_gnorm = self.actor_opt.update(
+            a_grads, train_state.opt_state["actor"], p["actor"])
+        params = {"actor": actor, "critic": critic}
+        target = soft_update(targ, params, self.tau)
+        ts = TrainState(step=train_state.step + 1, params=params,
+                        opt_state={"actor": a_opt, "critic": c_opt},
+                        extra={"target": target})
+        return ts, OptInfo(loss=c_loss, grad_norm=c_gnorm,
+                           extra={"actor_loss": a_loss, "td_abs": td_abs})

@@ -1,0 +1,99 @@
+"""SAC, newer version per the paper (footnote 3): entropy auto-tuning, twin
+critics, NO state-value function, and time-limit bootstrapping."""
+from __future__ import annotations
+
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...core.distributions import SquashedGaussian
+from ...train.optim import Optimizer, adam, soft_update
+
+F32 = jnp.float32
+
+
+class SAC:
+    def __init__(self, actor_fn: Callable, critic_fn: Callable,
+                 actor_opt: Optimizer, critic_opt: Optimizer, *,
+                 act_dim: int, gamma=0.99, tau=0.005,
+                 target_entropy=None, alpha_lr=3e-4, init_alpha=1.0):
+        self.actor = actor_fn    # (params, obs) -> (mean, log_std)
+        self.critic = critic_fn  # (params, obs, act) -> (n_critics, B)
+        self.actor_opt, self.critic_opt = actor_opt, critic_opt
+        self.gamma, self.tau = gamma, tau
+        self.dist = SquashedGaussian(act_dim)
+        self.target_entropy = (-float(act_dim) if target_entropy is None
+                               else target_entropy)
+        self.alpha_opt = adam(alpha_lr)
+        self.init_alpha = init_alpha
+
+    def init_train_state(self, rng, params) -> TrainState:
+        log_alpha = jnp.asarray(math.log(self.init_alpha), F32)
+        return TrainState(
+            step=jnp.zeros((), jnp.int32), params=params,
+            opt_state={"actor": self.actor_opt.init(params["actor"]),
+                       "critic": self.critic_opt.init(params["critic"]),
+                       "alpha": self.alpha_opt.init(log_alpha)},
+            extra={"target": {"critic": params["critic"]},
+                   "log_alpha": log_alpha})
+
+    def critic_loss(self, critic_params, params, target, log_alpha, batch, rng):
+        mean, log_std = self.actor(params["actor"], batch["next_observation"])
+        a_next, logp_next = self.dist.sample_with_logprob(rng, mean, log_std)
+        q_next = self.critic(target["critic"], batch["next_observation"], a_next)
+        alpha = jnp.exp(log_alpha)
+        v_next = jnp.min(q_next, axis=0) - alpha * logp_next
+        disc = self.gamma ** batch["n_used"].astype(F32)
+        y = jax.lax.stop_gradient(
+            batch["return_"] + disc * batch["bootstrap"] * v_next)
+        qs = self.critic(critic_params, batch["observation"], batch["action"])
+        td = qs - y[None]
+        loss = jnp.mean(batch["is_weights"][None] * jnp.square(td))
+        return loss, jnp.abs(td[0])
+
+    def actor_loss(self, actor_params, critic_params, log_alpha, batch, rng):
+        mean, log_std = self.actor(actor_params, batch["observation"])
+        a, logp = self.dist.sample_with_logprob(rng, mean, log_std)
+        q = jnp.min(self.critic(critic_params, batch["observation"], a), axis=0)
+        alpha = jnp.exp(log_alpha)
+        loss = jnp.mean(alpha * logp - q)
+        return loss, logp
+
+    def alpha_loss(self, log_alpha, logp):
+        return -jnp.mean(jnp.exp(log_alpha) *
+                         jax.lax.stop_gradient(logp + self.target_entropy))
+
+    def update(self, train_state: TrainState, batch, rng):
+        k1, k2 = jax.random.split(rng)
+        p, extra = train_state.params, train_state.extra
+        targ, log_alpha = extra["target"], extra["log_alpha"]
+
+        (c_loss, td_abs), c_grads = jax.value_and_grad(
+            self.critic_loss, has_aux=True)(
+            p["critic"], p, targ, log_alpha, batch, k1)
+        critic, c_opt, c_gnorm = self.critic_opt.update(
+            c_grads, train_state.opt_state["critic"], p["critic"])
+
+        (a_loss, logp), a_grads = jax.value_and_grad(
+            self.actor_loss, has_aux=True)(
+            p["actor"], critic, log_alpha, batch, k2)
+        actor, a_opt, a_gnorm = self.actor_opt.update(
+            a_grads, train_state.opt_state["actor"], p["actor"])
+
+        al_loss, al_grad = jax.value_and_grad(self.alpha_loss)(log_alpha, logp)
+        new_log_alpha, al_opt, _ = self.alpha_opt.update(
+            al_grad, train_state.opt_state["alpha"], log_alpha)
+
+        params = {"actor": actor, "critic": critic}
+        target = {"critic": soft_update(targ["critic"], critic, self.tau)}
+        ts = TrainState(step=train_state.step + 1, params=params,
+                        opt_state={"actor": a_opt, "critic": c_opt,
+                                   "alpha": al_opt},
+                        extra={"target": target, "log_alpha": new_log_alpha})
+        info = OptInfo(loss=c_loss, grad_norm=c_gnorm,
+                       extra={"actor_loss": a_loss, "alpha": jnp.exp(new_log_alpha),
+                              "entropy": -jnp.mean(logp), "td_abs": td_abs})
+        return ts, info

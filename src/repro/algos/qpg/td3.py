@@ -1,0 +1,81 @@
+"""TD3: twin critics, target policy smoothing, delayed actor updates."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ...core.algorithm import TrainState, OptInfo
+from ...train.optim import Optimizer, soft_update
+
+F32 = jnp.float32
+
+
+class TD3:
+    def __init__(self, actor_fn: Callable, critic_fn: Callable,
+                 actor_opt: Optimizer, critic_opt: Optimizer, *,
+                 gamma=0.99, tau=0.005, policy_noise=0.2, noise_clip=0.5,
+                 policy_delay=2):
+        self.actor, self.critic = actor_fn, critic_fn
+        self.actor_opt, self.critic_opt = actor_opt, critic_opt
+        self.gamma, self.tau = gamma, tau
+        self.policy_noise, self.noise_clip = policy_noise, noise_clip
+        self.policy_delay = policy_delay
+
+    def init_train_state(self, rng, params) -> TrainState:
+        return TrainState(
+            step=jnp.zeros((), jnp.int32), params=params,
+            opt_state={"actor": self.actor_opt.init(params["actor"]),
+                       "critic": self.critic_opt.init(params["critic"])},
+            extra={"target": params})
+
+    def critic_loss(self, critic_params, target, batch, rng):
+        a_next = self.actor(target["actor"], batch["next_observation"])
+        noise = jnp.clip(self.policy_noise * jax.random.normal(rng, a_next.shape),
+                         -self.noise_clip, self.noise_clip)
+        a_next = jnp.clip(a_next + noise, -1.0, 1.0)
+        q_next = self.critic(target["critic"], batch["next_observation"], a_next)
+        v_next = jnp.min(q_next, axis=0)  # clipped double-Q
+        disc = self.gamma ** batch["n_used"].astype(F32)
+        y = jax.lax.stop_gradient(
+            batch["return_"] + disc * batch["bootstrap"] * v_next)
+        qs = self.critic(critic_params, batch["observation"], batch["action"])
+        td = qs - y[None]
+        loss = jnp.mean(batch["is_weights"][None] * jnp.square(td))
+        return loss, jnp.abs(td[0])
+
+    def actor_loss(self, actor_params, critic_params, batch):
+        a = self.actor(actor_params, batch["observation"])
+        q = self.critic(critic_params, batch["observation"], a)[0]
+        return -jnp.mean(q)
+
+    def update(self, train_state: TrainState, batch, rng):
+        p, targ = train_state.params, train_state.extra["target"]
+        (c_loss, td_abs), c_grads = jax.value_and_grad(
+            self.critic_loss, has_aux=True)(p["critic"], targ, batch, rng)
+        critic, c_opt, c_gnorm = self.critic_opt.update(
+            c_grads, train_state.opt_state["critic"], p["critic"])
+        step = train_state.step + 1
+
+        # delayed policy update: compute always, apply conditionally
+        a_loss, a_grads = jax.value_and_grad(self.actor_loss)(
+            p["actor"], critic, batch)
+        actor_new, a_opt_new, a_gnorm = self.actor_opt.update(
+            a_grads, train_state.opt_state["actor"], p["actor"])
+        do_actor = (step % self.policy_delay) == 0
+        actor = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(do_actor, n, o), actor_new, p["actor"])
+        a_opt = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(do_actor, n, o), a_opt_new,
+            train_state.opt_state["actor"])
+
+        params = {"actor": actor, "critic": critic}
+        target_new = soft_update(targ, params, self.tau)
+        target = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(do_actor, n, o), target_new, targ)
+        ts = TrainState(step=step, params=params,
+                        opt_state={"actor": a_opt, "critic": c_opt},
+                        extra={"target": target})
+        return ts, OptInfo(loss=c_loss, grad_norm=c_gnorm,
+                           extra={"actor_loss": a_loss, "td_abs": td_abs})

@@ -1,0 +1,14 @@
+"""Core substrate: the paper's shared deep-RL machinery, JAX-native."""
+from .narrtup import (
+    namedarraytuple,
+    is_namedarraytuple,
+    is_namedtuple,
+    buffer_from_example,
+    get_leading_dims,
+    buffer_method,
+)
+from .leading_dims import infer_leading_dims, restore_leading_dims
+from .spaces import Box, Discrete, Composite
+from .distributions import Categorical, Gaussian, SquashedGaussian, EpsilonGreedy
+from .agent import Agent, AgentInputs, AgentStep, AlternatingAgentMixin
+from .algorithm import Algorithm, TrainState, OptInfo

@@ -1,0 +1,71 @@
+"""Agent base classes (paper §6.1, §6.3).
+
+Agents are functional in JAX: parameters and recurrent state are explicit
+arguments, so the same agent runs inside ``lax.scan`` rollouts, ``shard_map``
+parallel sampling, and pjit-sharded serving.  All agents receive
+(observation, prev_action, prev_reward) per the paper (§6.3); feed-forward
+agents simply ignore the extras.  Recurrent state (LSTM hidden, SSM state, or a
+KV cache) is a namedarraytuple carried by the caller — agnostic to structure,
+exactly the paper's CuDNN-interface-but-structure-agnostic design.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .narrtup import namedarraytuple
+
+AgentInputs = namedarraytuple("AgentInputs", ["observation", "prev_action", "prev_reward"])
+AgentStep = namedarraytuple("AgentStep", ["action", "agent_info"])
+
+
+class Agent:
+    """Base agent: wraps a model apply-fn and a distribution.
+
+    Subclasses define:
+      init_params(rng, example_inputs) -> params
+      step(params, rng, agent_inputs, state) -> (AgentStep, new_state)
+      value(params, agent_inputs, state)      (for bootstrapping, PG algos)
+    """
+
+    recurrent = False
+
+    def __init__(self, model_init: Callable, model_apply: Callable, distribution):
+        self.model_init = model_init
+        self.model_apply = model_apply
+        self.distribution = distribution
+
+    def init_params(self, rng, example_inputs):
+        return self.model_init(rng, example_inputs)
+
+    def initial_state(self, batch_size: int):
+        """Recurrent agents override; feed-forward returns None."""
+        return None
+
+    def step(self, params, rng, agent_inputs: AgentInputs, state=None):
+        raise NotImplementedError
+
+    def value(self, params, agent_inputs: AgentInputs, state=None):
+        raise NotImplementedError
+
+
+class AlternatingAgentMixin:
+    """Paper §2.1 'Alternating-GPU' sampling: two env groups ping-pong so env
+    stepping of one group overlaps action selection of the other.
+
+    On TPU the two half-batches become two independent dependency chains in one
+    compiled program; async dispatch overlaps them.  The mixin just provides
+    the half-batch bookkeeping used by samplers/alternating.py.
+    """
+
+    def split_half(self, tree):
+        lead = jax.tree_util.tree_leaves(tree)[0].shape[0]
+        half = lead // 2
+        first = jax.tree_util.tree_map(lambda x: x[:half], tree)
+        second = jax.tree_util.tree_map(lambda x: x[half:], tree)
+        return first, second
+
+    def join_halves(self, a, b):
+        return jax.tree_util.tree_map(lambda x, y: jnp.concatenate([x, y], axis=0), a, b)

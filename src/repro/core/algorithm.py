@@ -1,0 +1,34 @@
+"""Algorithm base interface (paper §6.1).
+
+An Algorithm owns the loss and the update rule; it consumes samples gathered by
+a sampler and trains the agent.  TrainState bundles params + optimizer state so
+the whole thing moves through pjit with explicit shardings.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+from .narrtup import namedarraytuple
+
+OptInfo = namedarraytuple("OptInfo", ["loss", "grad_norm", "extra"])
+
+
+class TrainState(NamedTuple):
+    step: Any
+    params: Any
+    opt_state: Any
+    extra: Any = None  # e.g. target-network params, alpha for SAC
+
+
+class Algorithm:
+    """Subclasses define:
+    init_train_state(rng, params) -> TrainState
+    loss(params, batch, rng, extra) -> (scalar, aux)
+    update(train_state, batch, rng) -> (train_state, OptInfo)
+    """
+
+    def init_train_state(self, rng, params) -> TrainState:
+        raise NotImplementedError
+
+    def update(self, train_state: TrainState, batch, rng):
+        raise NotImplementedError

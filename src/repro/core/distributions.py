@@ -1,0 +1,129 @@
+"""Action distributions (paper §6.1 'Distribution').
+
+Each distribution provides sample / log_likelihood / entropy / kl as pure
+functions over a parameter namedarraytuple, matching rlpyt's split where the
+distribution "defines related formulas for loss functions".  Includes the
+vector-valued epsilon-greedy of Ape-X/R2D2 (per-env epsilon).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .narrtup import namedarraytuple
+
+DistInfo = namedarraytuple("DistInfo", ["mean", "log_std"])
+DistInfoStd = DistInfo  # alias, rlpyt naming
+EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Categorical (A2C/PPO over discrete actions; LM policies over vocab)
+# ---------------------------------------------------------------------------
+class Categorical:
+    def __init__(self, dim: int):
+        self.dim = dim
+
+    def sample(self, rng, logits):
+        return jax.random.categorical(rng, logits, axis=-1)
+
+    def log_likelihood(self, actions, logits):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        return jnp.take_along_axis(logp, actions[..., None].astype(jnp.int32), axis=-1)[..., 0]
+
+    def entropy(self, logits):
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        p = jnp.exp(logp)
+        return -jnp.sum(p * logp, axis=-1)
+
+    def kl(self, logits_p, logits_q):
+        logp = jax.nn.log_softmax(logits_p, axis=-1)
+        logq = jax.nn.log_softmax(logits_q, axis=-1)
+        return jnp.sum(jnp.exp(logp) * (logp - logq), axis=-1)
+
+    def mode(self, logits):
+        return jnp.argmax(logits, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Diagonal Gaussian (DDPG/TD3 target noise, PPO-continuous)
+# ---------------------------------------------------------------------------
+class Gaussian:
+    def __init__(self, dim: int, min_std: float = 1e-6, clip=None):
+        self.dim = dim
+        self.min_std = min_std
+        self.clip = clip  # optional action clip (DDPG/TD3 exploration)
+
+    def sample(self, rng, mean, log_std):
+        std = jnp.maximum(jnp.exp(log_std), self.min_std)
+        noise = jax.random.normal(rng, mean.shape, mean.dtype)
+        a = mean + std * noise
+        if self.clip is not None:
+            a = jnp.clip(a, -self.clip, self.clip)
+        return a
+
+    def log_likelihood(self, actions, mean, log_std):
+        std = jnp.maximum(jnp.exp(log_std), self.min_std)
+        z = (actions - mean) / std
+        return jnp.sum(
+            -0.5 * z**2 - jnp.log(std) - 0.5 * math.log(2 * math.pi), axis=-1
+        )
+
+    def entropy(self, mean, log_std):
+        return jnp.sum(log_std + 0.5 * math.log(2 * math.pi * math.e), axis=-1)
+
+    def kl(self, mean_p, log_std_p, mean_q, log_std_q):
+        var_p, var_q = jnp.exp(2 * log_std_p), jnp.exp(2 * log_std_q)
+        return jnp.sum(
+            log_std_q - log_std_p + (var_p + (mean_p - mean_q) ** 2) / (2 * var_q) - 0.5,
+            axis=-1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Tanh-squashed Gaussian (SAC)
+# ---------------------------------------------------------------------------
+class SquashedGaussian(Gaussian):
+    """a = tanh(u), u ~ N(mean, std); log-prob includes tanh Jacobian."""
+
+    def sample_with_logprob(self, rng, mean, log_std):
+        std = jnp.maximum(jnp.exp(log_std), self.min_std)
+        noise = jax.random.normal(rng, mean.shape, mean.dtype)
+        u = mean + std * noise
+        a = jnp.tanh(u)
+        logp = super().log_likelihood(u, mean, log_std)
+        # log det Jacobian of tanh: sum log(1 - tanh(u)^2); numerically stable form
+        logp = logp - jnp.sum(2.0 * (math.log(2.0) - u - jax.nn.softplus(-2.0 * u)), axis=-1)
+        return a, logp
+
+    def sample(self, rng, mean, log_std):
+        return self.sample_with_logprob(rng, mean, log_std)[0]
+
+    def mode(self, mean, log_std):
+        return jnp.tanh(mean)
+
+
+# ---------------------------------------------------------------------------
+# Epsilon-greedy, vector-valued epsilon (Ape-X / R2D2 style, paper §1.1)
+# ---------------------------------------------------------------------------
+class EpsilonGreedy:
+    def __init__(self, dim: int):
+        self.dim = dim
+
+    @staticmethod
+    def apex_epsilons(n_envs: int, base: float = 0.4, alpha: float = 7.0):
+        """epsilon_i = base ** (1 + alpha * i / (N-1)); Ape-X eq. (1)."""
+        i = jnp.arange(n_envs, dtype=jnp.float32)
+        denom = max(n_envs - 1, 1)
+        return base ** (1.0 + alpha * i / denom)
+
+    def sample(self, rng, q_values, epsilon):
+        """epsilon: scalar or per-batch vector broadcast against q leading dims."""
+        rng_u, rng_a = jax.random.split(rng)
+        greedy = jnp.argmax(q_values, axis=-1)
+        rand = jax.random.randint(rng_a, greedy.shape, 0, q_values.shape[-1], dtype=greedy.dtype)
+        u = jax.random.uniform(rng_u, greedy.shape)
+        eps = jnp.broadcast_to(jnp.asarray(epsilon), greedy.shape)
+        return jnp.where(u < eps, rand, greedy)

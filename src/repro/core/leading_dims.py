@@ -1,0 +1,52 @@
+"""Leading-dimension protocol (paper §6.4).
+
+The same model forward must serve three call shapes:
+  []        single example   (buffer-spec construction)
+  [B]       sampling batch   (batched action selection / serving)
+  [T, B]    training batch   (time-major optimization)
+
+``infer_leading_dims`` inspects an input against its known feature rank and
+returns reshape info; ``restore_leading_dims`` puts outputs back.  Works on
+bare arrays and on namedarraytuple/pytree inputs (first leaf governs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def infer_leading_dims(x, feature_ndim: int):
+    """Return (lead_dim, T, B, flat_x) where flat_x is reshaped to [T*B, ...].
+
+    lead_dim in {0,1,2}: number of leading dims present on input.
+    """
+    leaves = [l for l in jax.tree_util.tree_leaves(x) if l is not None]
+    shape = leaves[0].shape
+    lead_dim = len(shape) - feature_ndim
+    if lead_dim not in (0, 1, 2):
+        raise ValueError(f"bad leading dims: shape={shape}, feature_ndim={feature_ndim}")
+    if lead_dim == 2:
+        T, B = shape[0], shape[1]
+    elif lead_dim == 1:
+        T, B = 1, shape[0]
+    else:
+        T, B = 1, 1
+
+    def flat(l):
+        return jnp.reshape(l, (T * B,) + l.shape[lead_dim:])
+
+    flat_x = jax.tree_util.tree_map(flat, x)
+    return lead_dim, T, B, flat_x
+
+
+def restore_leading_dims(outputs, lead_dim: int, T: int = 1, B: int = 1):
+    """Reshape outputs [T*B, ...] back to the caller's leading dims."""
+
+    def restore(l):
+        if lead_dim == 2:
+            return jnp.reshape(l, (T, B) + l.shape[1:])
+        if lead_dim == 1:
+            return l  # already [B, ...]
+        return jnp.squeeze(l, axis=0)
+
+    return jax.tree_util.tree_map(restore, outputs)

@@ -1,0 +1,94 @@
+"""Observation/action spaces (paper §6.1, §6.5).
+
+Gym-compatible semantics; the multi-modal Gym ``Dict`` space maps to
+``Composite`` backed by a namedarraytuple (paper §6.5) so multi-modal
+observations (e.g. camera + joint angles, or tokens + image embeddings) keep
+their structure all the way through the samples buffer into the model forward.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .narrtup import namedarraytuple
+
+
+class Space:
+    def sample(self, rng, batch_shape=()):
+        raise NotImplementedError
+
+    def null_value(self):
+        raise NotImplementedError
+
+    @property
+    def shape(self):
+        raise NotImplementedError
+
+
+class Discrete(Space):
+    def __init__(self, n: int, dtype=jnp.int32):
+        self.n = int(n)
+        self.dtype = dtype
+
+    @property
+    def shape(self):
+        return ()
+
+    def sample(self, rng, batch_shape=()):
+        return jax.random.randint(rng, batch_shape, 0, self.n, dtype=self.dtype)
+
+    def null_value(self):
+        return np.zeros((), dtype=np.int32)
+
+    def __repr__(self):
+        return f"Discrete({self.n})"
+
+
+class Box(Space):
+    def __init__(self, low, high, shape=None, dtype=jnp.float32):
+        low = np.asarray(low, dtype=np.float32)
+        high = np.asarray(high, dtype=np.float32)
+        if shape is not None:
+            low = np.broadcast_to(low, shape)
+            high = np.broadcast_to(high, shape)
+        self.low, self.high = low, high
+        self.dtype = dtype
+
+    @property
+    def shape(self):
+        return self.low.shape
+
+    def sample(self, rng, batch_shape=()):
+        u = jax.random.uniform(rng, tuple(batch_shape) + self.shape, dtype=self.dtype)
+        return u * (self.high - self.low) + self.low
+
+    def null_value(self):
+        return np.zeros(self.shape, dtype=np.float32)
+
+    def __repr__(self):
+        return f"Box(shape={self.shape})"
+
+
+class Composite(Space):
+    """Named collection of sub-spaces; samples are namedarraytuples."""
+
+    def __init__(self, typename: str, **subspaces):
+        self._cls = namedarraytuple(typename, tuple(subspaces.keys()))
+        self.subspaces = subspaces
+
+    @property
+    def shape(self):
+        return {k: s.shape for k, s in self.subspaces.items()}
+
+    def sample(self, rng, batch_shape=()):
+        rngs = jax.random.split(rng, len(self.subspaces))
+        return self._cls(
+            *(s.sample(r, batch_shape) for r, s in zip(rngs, self.subspaces.values()))
+        )
+
+    def null_value(self):
+        return self._cls(*(s.null_value() for s in self.subspaces.values()))
+
+    def __repr__(self):
+        return f"Composite({list(self.subspaces)})"

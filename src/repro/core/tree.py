@@ -1,0 +1,42 @@
+"""Small pytree helpers shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_select(pred, on_true, on_false):
+    """Elementwise jnp.where over matching trees (pred broadcast to leaves)."""
+    return jax.tree_util.tree_map(lambda a, b: jnp.where(pred, a, b), on_true, on_false)
+
+
+def tree_zeros_like(tree, dtype=None):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros_like(x, dtype=dtype), tree)
+
+
+def tree_stack(trees, axis=0):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=axis), *trees)
+
+
+def tree_concat(trees, axis=0):
+    return jax.tree_util.tree_map(lambda *xs: jnp.concatenate(xs, axis=axis), *trees)
+
+
+def tree_count_params(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_bytes(tree) -> int:
+    return int(sum(np.prod(l.shape) * l.dtype.itemsize for l in jax.tree_util.tree_leaves(tree)))
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree
+    )

@@ -1,0 +1,25 @@
+"""Pure-JAX environments (hardware adaptation of the paper's CPU simulators).
+
+Every env is a pair of pure functions (reset, step) over explicit state
+pytrees, so whole rollouts compile: ``vmap`` over envs, ``lax.scan`` over
+time.  ``step`` auto-resets on done (the returned obs is the first obs of the
+next episode), and env_info is a namedarraytuple with the SAME fields every
+step (paper §6.5's Gym-interface modification) — including ``timeout`` for
+time-limit value bootstrapping (paper footnote 3).
+"""
+from .base import EnvSpec, EnvInfo
+from .cartpole import make_cartpole
+from .pendulum import make_pendulum
+from .catch import make_catch
+from .token_lm import make_token_lm
+
+REGISTRY = {
+    "cartpole": make_cartpole,
+    "pendulum": make_pendulum,
+    "catch": make_catch,
+    "token_lm": make_token_lm,
+}
+
+
+def make_env(name: str, **kwargs) -> EnvSpec:
+    return REGISTRY[name](**kwargs)

@@ -1,0 +1,28 @@
+"""Env interface: (reset, step) pure functions + spaces.
+
+step(state, action, rng) -> (state', obs, reward, done, EnvInfo)
+
+- done marks episode boundary; the state'/obs returned are ALREADY reset
+  (auto-reset), so samplers never branch.
+- EnvInfo.timeout flags time-limit termination (bootstrap value, don't treat
+  as environment death) — the paper's SAC/TD3 fix (footnote 3).
+- EnvInfo.terminal_obs is the PRE-reset next observation (== obs when not
+  done); replay buffers that bootstrap across time limits store it so the
+  target value uses the true terminal state, not the auto-reset one.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from ..core.narrtup import namedarraytuple
+
+EnvInfo = namedarraytuple("EnvInfo", ["timeout", "episode_step", "terminal_obs"])
+
+
+class EnvSpec(NamedTuple):
+    name: str
+    reset: Callable          # (rng) -> (state, obs)
+    step: Callable           # (state, action, rng) -> (state, obs, reward, done, info)
+    observation_space: Any
+    action_space: Any
+    max_episode_steps: int

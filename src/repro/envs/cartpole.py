@@ -1,0 +1,65 @@
+"""CartPole-v1 dynamics in pure JAX (discrete control, reward 1/step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spaces import Box, Discrete
+from .base import EnvSpec, EnvInfo
+
+GRAVITY = 9.8
+CART_MASS = 1.0
+POLE_MASS = 0.1
+TOTAL_MASS = CART_MASS + POLE_MASS
+LENGTH = 0.5
+POLEMASS_LENGTH = POLE_MASS * LENGTH
+FORCE_MAG = 10.0
+TAU = 0.02
+THETA_LIMIT = 12 * 2 * jnp.pi / 360
+X_LIMIT = 2.4
+
+
+def make_cartpole(max_episode_steps: int = 500) -> EnvSpec:
+    def _fresh(rng):
+        return jax.random.uniform(rng, (4,), jnp.float32, -0.05, 0.05)
+
+    def reset(rng):
+        phys = _fresh(rng)
+        state = {"phys": phys, "t": jnp.zeros((), jnp.int32)}
+        return state, phys
+
+    def step(state, action, rng):
+        x, x_dot, theta, theta_dot = state["phys"]
+        force = jnp.where(action == 1, FORCE_MAG, -FORCE_MAG)
+        costh, sinth = jnp.cos(theta), jnp.sin(theta)
+        temp = (force + POLEMASS_LENGTH * theta_dot**2 * sinth) / TOTAL_MASS
+        thetaacc = (GRAVITY * sinth - costh * temp) / (
+            LENGTH * (4.0 / 3.0 - POLE_MASS * costh**2 / TOTAL_MASS))
+        xacc = temp - POLEMASS_LENGTH * thetaacc * costh / TOTAL_MASS
+        x = x + TAU * x_dot
+        x_dot = x_dot + TAU * xacc
+        theta = theta + TAU * theta_dot
+        theta_dot = theta_dot + TAU * thetaacc
+        phys = jnp.stack([x, x_dot, theta, theta_dot])
+        t = state["t"] + 1
+
+        fell = (jnp.abs(x) > X_LIMIT) | (jnp.abs(theta) > THETA_LIMIT)
+        timeout = t >= max_episode_steps
+        done = fell | timeout
+        reward = jnp.float32(1.0)
+
+        fresh = _fresh(rng)
+        obs_raw = phys
+        phys = jnp.where(done, fresh, phys)
+        t = jnp.where(done, 0, t)
+        info = EnvInfo(timeout=timeout & ~fell, episode_step=t, terminal_obs=obs_raw)
+        return {"phys": phys, "t": t}, phys, reward, done, info
+
+    return EnvSpec(
+        name="cartpole",
+        reset=reset,
+        step=step,
+        observation_space=Box(low=-jnp.inf, high=jnp.inf, shape=(4,)),
+        action_space=Discrete(2),
+        max_episode_steps=max_episode_steps,
+    )

@@ -1,0 +1,59 @@
+"""Catch: discrete control from vision (bsuite-style), the Atari stand-in.
+
+A ball falls from a random column of a rows x cols board; the agent moves a
+paddle on the bottom row {left, stay, right}; reward +1 on catch, -1 on miss.
+Observation is the (rows, cols, 1) float image — exercising the conv models
+and the frame-based replay buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spaces import Box, Discrete
+from .base import EnvSpec, EnvInfo
+
+
+def make_catch(rows: int = 10, cols: int = 5) -> EnvSpec:
+    def _obs(ball_r, ball_c, paddle_c):
+        img = jnp.zeros((rows, cols), jnp.float32)
+        img = img.at[ball_r, ball_c].set(1.0)
+        img = img.at[rows - 1, paddle_c].set(1.0)
+        return img[..., None]
+
+    def _fresh(rng):
+        ball_c = jax.random.randint(rng, (), 0, cols)
+        return {"ball_r": jnp.zeros((), jnp.int32), "ball_c": ball_c,
+                "paddle_c": jnp.asarray(cols // 2, jnp.int32)}
+
+    def reset(rng):
+        s = _fresh(rng)
+        return s, _obs(s["ball_r"], s["ball_c"], s["paddle_c"])
+
+    def step(state, action, rng):
+        move = action.astype(jnp.int32) - 1  # {0,1,2} -> {-1,0,+1}
+        paddle_c = jnp.clip(state["paddle_c"] + move, 0, cols - 1)
+        ball_r = state["ball_r"] + 1
+        done = ball_r >= rows - 1
+        caught = done & (paddle_c == state["ball_c"])
+        reward = jnp.where(done, jnp.where(caught, 1.0, -1.0), 0.0).astype(jnp.float32)
+
+        fresh = _fresh(rng)
+        obs_raw = _obs(ball_r, state["ball_c"], paddle_c)
+        ns = {
+            "ball_r": jnp.where(done, fresh["ball_r"], ball_r),
+            "ball_c": jnp.where(done, fresh["ball_c"], state["ball_c"]),
+            "paddle_c": jnp.where(done, fresh["paddle_c"], paddle_c),
+        }
+        info = EnvInfo(timeout=jnp.zeros((), bool), episode_step=ns["ball_r"],
+                       terminal_obs=obs_raw)
+        return ns, _obs(ns["ball_r"], ns["ball_c"], ns["paddle_c"]), reward, done, info
+
+    return EnvSpec(
+        name="catch",
+        reset=reset,
+        step=step,
+        observation_space=Box(low=0.0, high=1.0, shape=(rows, cols, 1)),
+        action_space=Discrete(3),
+        max_episode_steps=rows,
+    )

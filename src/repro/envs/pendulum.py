@@ -1,0 +1,67 @@
+"""Pendulum-v1 dynamics in pure JAX (continuous control, Mujoco-section
+stand-in: same reward shape, bounded torque, 200-step time limit)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spaces import Box
+from .base import EnvSpec, EnvInfo
+
+MAX_SPEED = 8.0
+MAX_TORQUE = 2.0
+DT = 0.05
+G = 10.0
+M = 1.0
+L = 1.0
+
+
+def _angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi
+
+
+def make_pendulum(max_episode_steps: int = 200) -> EnvSpec:
+    def _obs(th, thdot):
+        return jnp.stack([jnp.cos(th), jnp.sin(th), thdot])
+
+    def _fresh(rng):
+        k1, k2 = jax.random.split(rng)
+        th = jax.random.uniform(k1, (), jnp.float32, -jnp.pi, jnp.pi)
+        thdot = jax.random.uniform(k2, (), jnp.float32, -1.0, 1.0)
+        return th, thdot
+
+    def reset(rng):
+        th, thdot = _fresh(rng)
+        state = {"th": th, "thdot": thdot, "t": jnp.zeros((), jnp.int32)}
+        return state, _obs(th, thdot)
+
+    def step(state, action, rng):
+        th, thdot = state["th"], state["thdot"]
+        u = jnp.clip(action[..., 0] if jnp.ndim(action) else action,
+                     -MAX_TORQUE, MAX_TORQUE)
+        cost = _angle_normalize(th) ** 2 + 0.1 * thdot**2 + 0.001 * u**2
+        thdot = thdot + (3 * G / (2 * L) * jnp.sin(th) + 3.0 / (M * L**2) * u) * DT
+        thdot = jnp.clip(thdot, -MAX_SPEED, MAX_SPEED)
+        th = th + thdot * DT
+        t = state["t"] + 1
+
+        timeout = t >= max_episode_steps
+        done = timeout
+        obs_raw = _obs(th, thdot)
+        fth, fthdot = _fresh(rng)
+        th = jnp.where(done, fth, th)
+        thdot = jnp.where(done, fthdot, thdot)
+        t = jnp.where(done, 0, t)
+        info = EnvInfo(timeout=timeout, episode_step=t, terminal_obs=obs_raw)
+        return ({"th": th, "thdot": thdot, "t": t}, _obs(th, thdot),
+                -cost.astype(jnp.float32), done, info)
+
+    return EnvSpec(
+        name="pendulum",
+        reset=reset,
+        step=step,
+        observation_space=Box(low=jnp.array([-1.0, -1.0, -MAX_SPEED]),
+                              high=jnp.array([1.0, 1.0, MAX_SPEED])),
+        action_space=Box(low=-MAX_TORQUE, high=MAX_TORQUE, shape=(1,)),
+        max_episode_steps=max_episode_steps,
+    )

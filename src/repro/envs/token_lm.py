@@ -1,0 +1,59 @@
+"""Token MDP: the RLHF-style environment where the policy IS a language model.
+
+A fixed random Markov chain over the vocabulary plays "environment": the
+observation is the current token, the action is the next token, and the reward
+is the log-probability of that transition under the chain (so the optimal
+policy matches the chain's conditional argmax, and expected reward has a known
+upper bound).  Batched action selection over this env is exactly LM decoding;
+the paper's serving machinery runs unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.spaces import Discrete
+from .base import EnvSpec, EnvInfo
+
+
+def make_token_lm(vocab: int = 256, episode_len: int = 64, temp: float = 1.0,
+                  seed: int = 0) -> EnvSpec:
+    # fixed environment dynamics: random transition logits (V, V)
+    chain_logits = temp * jax.random.normal(jax.random.PRNGKey(seed), (vocab, vocab))
+    chain_logp = jax.nn.log_softmax(chain_logits, axis=-1)
+
+    def _fresh(rng):
+        tok = jax.random.randint(rng, (), 0, vocab)
+        return {"tok": tok, "t": jnp.zeros((), jnp.int32)}
+
+    def reset(rng):
+        s = _fresh(rng)
+        return s, s["tok"]
+
+    def step(state, action, rng):
+        a = action.astype(jnp.int32)
+        reward = chain_logp[state["tok"], a].astype(jnp.float32)
+        t = state["t"] + 1
+        timeout = t >= episode_len
+        done = timeout
+        fresh = _fresh(rng)
+        tok = jnp.where(done, fresh["tok"], a)
+        t = jnp.where(done, 0, t)
+        info = EnvInfo(timeout=timeout, episode_step=t, terminal_obs=a)
+        return {"tok": tok, "t": t}, tok, reward, done, info
+
+    return EnvSpec(
+        name="token_lm",
+        reset=reset,
+        step=step,
+        observation_space=Discrete(vocab),
+        action_space=Discrete(vocab),
+        max_episode_steps=episode_len,
+    )
+
+
+def chain_log_probs(vocab: int = 256, temp: float = 1.0, seed: int = 0):
+    """The env's true transition log-probs (V, V) — for computing the optimal
+    expected reward (greedy upper bound) in tests and learning curves."""
+    logits = temp * jax.random.normal(jax.random.PRNGKey(seed), (vocab, vocab))
+    return jax.nn.log_softmax(logits, axis=-1)

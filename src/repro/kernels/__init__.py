@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret mode
+on CPU; enabled on real TPUs via use_pallas flags):
+
+- flash_attention: fused blockwise-softmax GQA attention (causal, sliding
+  window, logit softcap) — removes the materialized (B,H,T,S) score traffic
+  that dominates the baseline memory roofline term.
+- ssd_scan: Mamba2 SSD chunked scan with carried inter-chunk state.
+- sum_tree: prioritized-replay stratified sampling as blocked prefix-sum +
+  two-level descent (dynamic-slice friendly, no scatter/gather trees).
+"""

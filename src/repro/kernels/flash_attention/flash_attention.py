@@ -1,0 +1,131 @@
+"""Flash attention Pallas TPU kernel: fused blockwise-softmax GQA attention.
+
+TPU adaptation of the FlashAttention idea (the paper's R2D1/serving hot
+spot at LM scale): instead of CUDA warps/shared-memory, tiles are BlockSpec
+VMEM blocks sized to the MXU (128-multiples); the softmax runs online over
+KV tiles with running (max, sum, acc) scratch carried across the minor-most
+grid dimension (TPU grids execute sequentially, so VMEM scratch persists).
+
+Grid: (B, H, T/block_q, S/block_k) — the KV-tile axis iterates innermost;
+GQA maps query head h to KV head h // (H // Hkv) in the BlockSpec index_map,
+so repeated KV heads are never materialized.
+
+Supports: causal masking with a query position offset (decode appends),
+sliding-window attention (mixtral/gemma2-local), logit softcap (gemma2).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale, causal, window, softcap, block_q, block_k,
+                 n_kblocks, q_offset):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = iq * block_q + q_offset
+    k_start = ik * block_k
+    qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # skip fully-masked tiles (causal: tile entirely in the future;
+    # window: tile entirely before the window)
+    run = jnp.asarray(True)
+    if causal:
+        run &= k_start <= q_start + block_q - 1
+    if window is not None:
+        run &= k_start + block_k - 1 > q_start - window
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0, :, 0, :].astype(F32)          # (block_q, dh)
+        k = k_ref[0, :, 0, :].astype(F32)          # (block_k, dh)
+        v = v_ref[0, :, 0, :].astype(F32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=F32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        mask = jnp.ones_like(s, bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=F32)
+        m_scr[...] = m_new
+
+    @pl.when(ik == n_kblocks - 1)
+    def _finish():
+        l = l_scr[...]
+        safe = jnp.maximum(l, 1e-30)[:, None]
+        o_ref[0, :, 0, :] = (acc_scr[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           q_offset: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = True):
+    """q: (B, T, H, dh); k, v: (B, S, Hkv, dh) -> (B, T, H, dh)."""
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    assert T % block_q == 0 and S % block_k == 0, (T, S, block_q, block_k)
+    n_kblocks = S // block_k
+    grid = (B, H, T // block_q, n_kblocks)
+    scale = 1.0 / math.sqrt(dh)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k,
+        n_kblocks=n_kblocks, q_offset=q_offset)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, dh),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, dh),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, dh),
+                               lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, T, H, dh), q.dtype),
+        scratch_shapes=[
+            # running max / sum / accumulator in VMEM, persist across ik
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q,), F32),
+            pltpu.VMEM((block_q, dh), F32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

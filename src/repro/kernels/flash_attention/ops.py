@@ -1,0 +1,55 @@
+"""jit'd public wrapper: pads ragged shapes to block multiples, dispatches to
+the Pallas kernel (interpret on CPU, compiled on TPU), falls back to the
+reference for shapes below one block."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ref import attention_reference
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "q_offset",
+                     "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = True):
+    """Fused GQA attention. q:(B,T,H,dh), k/v:(B,S,Hkv,dh) -> (B,T,H,dh).
+
+    Handles non-multiple T/S by padding (padded K positions are masked out
+    by the causal/validity logic: they sit at positions >= S, beyond any
+    real query when q_offset + T <= S)."""
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    bq = min(block_q, max(T, 1))
+    bk = min(block_k, max(S, 1))
+    qp, T0 = _pad_to(q, 1, bq)
+    kp, S0 = _pad_to(k, 1, bk)
+    vp, _ = _pad_to(v, 1, bk)
+    if not causal and S0 != kp.shape[1]:
+        # non-causal padding needs explicit masking; fall back to reference
+        return attention_reference(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, q_offset=q_offset)
+    out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                 softcap=softcap, q_offset=q_offset,
+                                 block_q=bq, block_k=bk, interpret=interpret)
+    return out[:, :T0]

@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the flash attention kernel (GQA, causal, window,
+softcap) — the exact math the kernel must reproduce, O(T*S) memory."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_reference(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        q_offset: int = 0):
+    """q: (B, T, H, dh); k, v: (B, S, Hkv, dh).  Positions are absolute:
+    q token i sits at q_offset + i; k token j at j.  Returns (B, T, H, dh)
+    in q.dtype, softmax in f32."""
+    B, T, H, dh = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, T, Hkv, G, dh)
+    scale = 1.0 / math.sqrt(dh)
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(F32), k.astype(F32)) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = q_offset + jnp.arange(T)
+    kpos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v.astype(F32))
+    return out.reshape(B, T, H, dh).astype(q.dtype)

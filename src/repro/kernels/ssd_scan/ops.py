@@ -1,0 +1,25 @@
+"""jit'd public wrapper for the SSD scan kernel (pads T to chunk multiple,
+dt=0 padding adds no state contribution — same convention as the ref)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ssd_scan import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_h", "interpret"))
+def ssd_scan(x, dt, A, Bmat, Cmat, *, chunk: int = 64, block_h: int = 8,
+             interpret: bool = True):
+    B, T, H, P = x.shape
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, s = ssd_scan_pallas(x, dt, A, Bmat, Cmat, chunk=chunk,
+                           block_h=block_h, interpret=interpret)
+    return y[:, :T], s

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: the models/layers.py SSD chunked scan (the exact math the
+mamba2/zamba2 backbones train with)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.layers import ssd_chunked
+
+
+def ssd_reference(x, dt, A, Bmat, Cmat, *, chunk: int = 64, state=None):
+    """x:(B,T,H,P) dt:(B,T,H) A:(H,)<0  B/C:(B,T,G,N) -> (y, final_state)."""
+    return ssd_chunked(x, dt, A, Bmat, Cmat, chunk, state)

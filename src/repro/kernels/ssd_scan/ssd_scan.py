@@ -1,0 +1,114 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD (state-space duality) algorithm: the GPU version
+uses warp-level scans; here each grid step processes one (batch, head-block,
+chunk) tile entirely in VMEM — intra-chunk terms are dense (chunk x chunk)
+MXU matmuls, and the inter-chunk recurrence is carried in a VMEM scratch
+state across the innermost (sequential) chunk grid axis.
+
+Grid: (B, H/block_h, T/chunk) — chunk axis innermost.  Head blocks must not
+cross SSD group boundaries (block_h divides H//G), so B/C tiles are indexed
+per group exactly like GQA KV heads in flash_attention.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_final_ref,
+                s_scr, *, chunk, n_chunks):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    x = x_ref[0].astype(F32)          # (Q, bh, P)
+    dt = dt_ref[0].astype(F32)        # (Q, bh)
+    A = a_ref[...].astype(F32)        # (bh,)
+    Bm = b_ref[0, :, 0, :].astype(F32)  # (Q, N)
+    Cm = c_ref[0, :, 0, :].astype(F32)  # (Q, N)
+
+    dA = dt * A[None, :]              # (Q, bh), negative
+    cum = jnp.cumsum(dA, axis=0)      # (Q, bh)
+    # intra-chunk decay L[q, k, h] = exp(cum_q - cum_k) for q >= k
+    # (mask BEFORE exp — masked entries are positive and overflow; see ref)
+    tri = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >=
+           jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))[..., None]
+    Ldiff = jnp.where(tri, cum[:, None, :] - cum[None, :, :], 0.0)
+    L = jnp.where(tri, jnp.exp(Ldiff), 0.0)              # (Q, K, bh)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=F32)  # (Q, K)
+    M = scores[..., None] * L * dt[None, :, :]           # (Q, K, bh)
+    y_diag = jnp.einsum("qkh,khp->qhp", M, x)
+
+    s_prev = s_scr[...]                                   # (bh, P, N)
+    decay_out = jnp.exp(cum)                              # (Q, bh)
+    y_off = jnp.einsum("qn,hpn->qhp", Cm, s_prev) * decay_out[..., None]
+
+    decay_last = jnp.exp(cum[-1:, :] - cum)               # (Q, bh)
+    w = decay_last * dt                                   # (Q, bh)
+    s_new = s_prev * jnp.exp(cum[-1, :])[:, None, None] + jnp.einsum(
+        "qn,qhp->hpn", Bm, x * w[..., None])
+    s_scr[...] = s_new
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        s_final_ref[0] = s_new.astype(s_final_ref.dtype)
+
+
+def ssd_scan_pallas(x, dt, A, Bmat, Cmat, *, chunk: int = 64,
+                    block_h: int = 8, interpret: bool = True):
+    """x:(B,T,H,P) dt:(B,T,H) A:(H,) B/C:(B,T,G,N) -> (y (B,T,H,P) in x.dtype,
+    final_state (B,H,P,N) f32)."""
+    B, T, H, P = x.shape
+    G, N = Bmat.shape[2], Bmat.shape[3]
+    block_h = min(block_h, H)
+    assert T % chunk == 0, (T, chunk)
+    assert H % block_h == 0 and (H // G) % block_h == 0, (H, G, block_h)
+    n_chunks = T // chunk
+    heads_per_group = H // G
+    grid = (B, H // block_h, n_chunks)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+
+    def g_of(ih):
+        return (ih * block_h) // heads_per_group
+
+    y, s_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, block_h, P),
+                         lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, block_h),
+                         lambda b, ih, ic: (b, ic, ih)),
+            pl.BlockSpec((block_h,), lambda b, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, ih, ic: (b, ic, g_of(ih), 0)),
+            pl.BlockSpec((1, chunk, 1, N),
+                         lambda b, ih, ic: (b, ic, g_of(ih), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, block_h, P),
+                         lambda b, ih, ic: (b, ic, ih, 0)),
+            pl.BlockSpec((1, block_h, P, N),
+                         lambda b, ih, ic: (b, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), F32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_h, P, N), F32)],
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat)
+    return y, s_final

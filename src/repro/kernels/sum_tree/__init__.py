@@ -1,0 +1,2 @@
+from .ops import BlockedPriorities, init_priorities, set_priorities, sample_proportional
+from .ref import sample_reference

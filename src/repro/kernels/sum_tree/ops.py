@@ -1,0 +1,46 @@
+"""Functional blocked-priority state + jit'd wrappers around the kernel."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .sum_tree import sample_pallas
+
+F32 = jnp.float32
+
+
+class BlockedPriorities(NamedTuple):
+    leaves: jnp.ndarray      # (n_blocks, block_size)
+    block_sums: jnp.ndarray  # (n_blocks,)
+
+
+def init_priorities(capacity: int, block_size: int = 512) -> BlockedPriorities:
+    n_blocks = -(-capacity // block_size)
+    return BlockedPriorities(
+        leaves=jnp.zeros((n_blocks, block_size), F32),
+        block_sums=jnp.zeros((n_blocks,), F32))
+
+
+@jax.jit
+def set_priorities(state: BlockedPriorities, idx, priorities) -> BlockedPriorities:
+    bs = state.leaves.shape[1]
+    flat = state.leaves.reshape(-1).at[idx].set(priorities.astype(F32))
+    leaves = flat.reshape(state.leaves.shape)
+    return BlockedPriorities(leaves=leaves, block_sums=jnp.sum(leaves, axis=1))
+
+
+def total(state: BlockedPriorities):
+    return jnp.sum(state.block_sums)
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "interpret"))
+def sample_proportional(state: BlockedPriorities, rng, batch: int,
+                        interpret: bool = True):
+    """Stratified proportional sampling; returns (idx, prob)."""
+    tot = total(state)
+    u = (jnp.arange(batch) + jax.random.uniform(rng, (batch,))) / batch * tot
+    return sample_pallas(state.leaves, state.block_sums, u,
+                         block_b=min(256, batch), interpret=interpret)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for blocked proportional sampling.
+
+Given priorities p (flat, length n) and uniforms u in [0, sum(p)), return for
+each u the smallest index i with cumsum(p)[i] > u — identical semantics to a
+sum-tree descent (replay/sum_tree.py, replay/device.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sample_reference(priorities, u):
+    cum = jnp.cumsum(priorities.astype(jnp.float64)
+                     if priorities.dtype == jnp.float64
+                     else priorities.astype(jnp.float32))
+    idx = jnp.sum(cum[None, :] <= u[:, None], axis=1)
+    idx = jnp.minimum(idx, priorities.shape[0] - 1)
+    total = cum[-1]
+    prob = priorities[idx] / jnp.maximum(total, 1e-12)
+    return idx.astype(jnp.int32), prob

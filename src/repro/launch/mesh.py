@@ -1,0 +1,44 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before calling.
+
+Mesh shapes (TPU v5e pod = 16x16 = 256 chips):
+- single-pod: (16, 16) over ('data', 'model')
+- multi-pod:  (2, 16, 16) over ('pod', 'data', 'model') — 512 chips; the
+  'pod' axis is outer data parallelism whose all-reduce crosses pod links
+  (the int8-EF-compression target).
+"""
+from __future__ import annotations
+
+import jax
+
+from ..models import sharding as shd
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires >=4 forced host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def install(mesh):
+    """Register mesh with the sharding-rule module (dp/tp axis names)."""
+    if mesh is None:
+        shd.set_global_mesh(None)
+        return None
+    axes = mesh.axis_names
+    dp = tuple(a for a in axes if a != "model")
+    shd.set_global_mesh(mesh, dp_axes=dp, tp_axis="model")
+    return mesh
+
+
+# Hardware constants (TPU v5e) for the roofline (EXPERIMENTS.md §Roofline)
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW = 50e9                  # bytes/s per link (~per chip, 1 link used)

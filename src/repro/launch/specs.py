@@ -1,0 +1,62 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run, no allocation).
+
+``input_specs(cfg, cell)`` returns (kind, kwargs-of-ShapeDtypeStructs) for the
+step function the cell lowers:
+  train   -> train_step(params, opt_state, batch)
+  prefill -> prefill_step(params, cache, tokens [, img/enc])
+  decode  -> serve_step(params, cache, tokens)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import ShapeDtypeStruct as SDS
+
+from ..models.config import ModelConfig, ShapeCell
+from ..models import backbones as bb
+
+F32, I32, BF16 = jnp.float32, jnp.int32, jnp.bfloat16
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict[str, Any]:
+    B, T = cell.global_batch, cell.seq_len
+    batch = {
+        "tokens": SDS((B, T), I32),
+        "actions": SDS((B, T), I32),
+        "logp_old": SDS((B, T), F32),
+        "advantage": SDS((B, T), F32),
+        "return_": SDS((B, T), F32),
+    }
+    if cfg.family == "vlm":
+        batch["img_embed"] = SDS((B, cfg.n_img_tokens, cfg.d_model), BF16)
+    if cfg.family == "encdec":
+        batch["enc_frames"] = SDS((B, cfg.enc_len, cfg.d_model), BF16)
+    return batch
+
+
+def cache_specs(cfg: ModelConfig, B: int, S: int):
+    """Cache ShapeDtypeStructs via eval_shape over init_cache (no alloc)."""
+    return jax.eval_shape(
+        lambda: bb.init_cache(cfg, B, S, img_len=cfg.n_img_tokens,
+                              enc_len=cfg.enc_len))
+
+
+def prefill_specs(cfg: ModelConfig, cell: ShapeCell):
+    B, T = cell.global_batch, cell.seq_len
+    kw = {"tokens": SDS((B, T), I32), "cache": cache_specs(cfg, B, T)}
+    if cfg.family == "vlm":
+        kw["img"] = SDS((B, cfg.n_img_tokens, cfg.d_model), BF16)
+    if cfg.family == "encdec":
+        kw["enc_frames"] = SDS((B, cfg.enc_len, cfg.d_model), BF16)
+    return kw
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell):
+    B, S = cell.global_batch, cell.seq_len
+    return {"tokens": SDS((B,), I32), "cache": cache_specs(cfg, B, S)}
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: bb.init_lm(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,140 @@
+"""End-to-end LM-policy RL training driver (example app + launcher target).
+
+The RLHF-style regime from DESIGN.md §3: the policy IS a language model over
+the token-MDP environment; batched action selection is LM decoding with a
+KV/SSM cache (the paper's serving path), and the PPO update is the paper's
+training path — the same train_step the multi-pod dry-run lowers.
+
+CPU-runnable at smoke scale:
+  PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
+      --steps 50 --batch 16 --horizon 32
+On a pod, drop --smoke and pass --mesh single|multi (the launcher generates
+per-pod jax.distributed init; see launcher.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_smoke_config
+from ..models import backbones as bb
+from ..models.config import ModelConfig
+from ..envs.token_lm import make_token_lm
+from ..algos.pg.gae import gae_associative
+from ..algos.pg.ppo import make_lm_ppo_train_step
+from ..train.optim import adam
+from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from ..utils.logger import Logger
+
+F32 = jnp.float32
+
+
+def make_lm_rollout(cfg: ModelConfig, env, batch: int, horizon: int,
+                    temperature: float = 1.0):
+    """Batched action selection with the serving path: one decode_step per
+    env step, cache carried through a lax.scan."""
+    V = env.action_space.n
+
+    def rollout(params, rng):
+        k_env, k_roll = jax.random.split(rng)
+        env_state, obs = jax.vmap(env.reset)(jax.random.split(k_env, batch))
+        cache = bb.init_cache(cfg, batch, horizon + 1)
+
+        def step(carry, k):
+            env_state, obs, cache = carry
+            k_act, k_step = jax.random.split(k)
+            hidden, cache = bb.decode_step(params, cache, obs, cfg)
+            logits = bb.lm_logits(params, hidden, cfg)[:, 0, :V].astype(F32)
+            value = bb.value_out(params, hidden)[:, 0]
+            action = jax.random.categorical(k_act, logits / temperature)
+            logp = jnp.take_along_axis(jax.nn.log_softmax(logits, axis=-1),
+                                       action[:, None], axis=1)[:, 0]
+            env_state, obs2, reward, done, _ = jax.vmap(env.step)(
+                env_state, action, jax.random.split(k_step, batch))
+            out = {"tokens": obs, "actions": action, "logp": logp,
+                   "value": value, "reward": reward, "done": done}
+            return (env_state, obs2, cache), out
+
+        (_, obs_last, cache), traj = jax.lax.scan(
+            step, (env_state, obs, cache), jax.random.split(k_roll, horizon))
+        # bootstrap value of the last obs
+        hidden, _ = bb.decode_step(params, cache, obs_last, cfg)
+        v_last = bb.value_out(params, hidden)[:, 0]
+        return traj, v_last
+
+    return rollout
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--horizon", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-dir", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-interval", type=int, default=0)
+    ap.add_argument("--restore", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    env = make_token_lm(vocab=cfg.vocab, episode_len=args.horizon)
+    logger = Logger(args.log_dir)
+    rng = jax.random.PRNGKey(args.seed)
+    k_init, rng = jax.random.split(rng)
+
+    params = bb.init_lm(k_init, cfg)
+    opt = adam(args.lr, grad_clip=1.0)
+    opt_state = opt.init(params)
+    rollout = jax.jit(make_lm_rollout(cfg, env, args.batch, args.horizon))
+    train_step = jax.jit(make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003))
+
+    start = 0
+    if args.restore and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), manifest = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        start = manifest["step"]
+        print(f"restored step {start}")
+
+    @jax.jit
+    def build_batch(traj, v_last):
+        # time-major (T, B) -> GAE -> batch-major (B, T) for the train step
+        adv, ret = gae_associative(traj["reward"], traj["value"], v_last,
+                                   traj["done"], gamma=0.99, lam=0.95)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        tm = lambda x: jnp.swapaxes(x, 0, 1)
+        return {"tokens": tm(traj["tokens"]), "actions": tm(traj["actions"]),
+                "logp_old": tm(traj["logp"]), "advantage": tm(adv),
+                "return_": tm(ret)}
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        rng, k = jax.random.split(rng)
+        traj, v_last = rollout(params, k)
+        batch = build_batch(traj, v_last)
+        params, opt_state, metrics = train_step(params, opt_state, batch)
+        if (step + 1) % 10 == 0 or step == args.steps - 1:
+            sps = args.batch * args.horizon * 10 / max(time.time() - t0, 1e-9)
+            t0 = time.time()
+            logger.record(step + 1, {
+                "avg_reward": float(jnp.mean(traj["reward"])),
+                "loss": float(metrics["loss"]),
+                "entropy": float(metrics["entropy"]),
+                "samples_per_sec": sps,
+            })
+        if args.ckpt_dir and args.ckpt_interval and \
+                (step + 1) % args.ckpt_interval == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, (params, opt_state))
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: configs, layers, backbones (the paper's 'Model' at modern
+scale), RL-scale models, heads, and sharding rules."""
+from .config import ModelConfig, ShapeCell, SHAPES, pad_vocab
+from . import layers, backbones, sharding, heads, rl_models

@@ -1,0 +1,88 @@
+"""Heads attached to a backbone's hidden states (paper §6.1 'Model' outputs).
+
+DQN-family heads (q / dueling / categorical) and PG heads (policy logits /
+value) as pure functions over small param dicts.  These attach either to the
+LM backbones (vocab-sized action space: token MDP) or to the small RL models
+(rl_models.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, F32
+
+
+def init_linear(rng, d_in, d_out):
+    k1, _ = jax.random.split(rng)
+    return {"w": _dense_init(k1, (d_in, d_out), d_in), "b": jnp.zeros((d_out,), F32)}
+
+
+def linear(p, x):
+    return jnp.einsum("...d,dk->...k", x, p["w"].astype(x.dtype)) + p["b"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# DQN heads
+# ---------------------------------------------------------------------------
+
+def init_q_head(rng, d_in, n_actions, *, dueling=False, n_atoms=0):
+    ks = jax.random.split(rng, 2)
+    out = n_actions * max(n_atoms, 1)
+    p = {"adv": init_linear(ks[0], d_in, out)}
+    if dueling:
+        p["val"] = init_linear(ks[1], d_in, max(n_atoms, 1))
+    return p
+
+
+def q_head(p, h, n_actions, *, dueling=False, n_atoms=0):
+    """h: (..., d) -> q (..., A) or logits (..., A, atoms) (categorical)."""
+    a = linear(p["adv"], h)
+    if n_atoms:
+        a = a.reshape(a.shape[:-1] + (n_actions, n_atoms))
+    if dueling:
+        v = linear(p["val"], h)
+        if n_atoms:
+            v = v[..., None, :]
+            a = a - jnp.mean(a, axis=-2, keepdims=True)
+        else:
+            a = a - jnp.mean(a, axis=-1, keepdims=True)
+        return v + a
+    return a
+
+
+# ---------------------------------------------------------------------------
+# Policy-gradient heads
+# ---------------------------------------------------------------------------
+
+def init_pg_head(rng, d_in, n_actions):
+    k1, k2 = jax.random.split(rng)
+    return {"pi": init_linear(k1, d_in, n_actions), "v": init_linear(k2, d_in, 1)}
+
+
+def pg_head(p, h):
+    return linear(p["pi"], h), linear(p["v"], h.astype(F32))[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Continuous-control heads (DDPG / TD3 / SAC)
+# ---------------------------------------------------------------------------
+
+def init_mu_head(rng, d_in, act_dim):
+    return {"mu": init_linear(rng, d_in, act_dim)}
+
+
+def mu_head(p, h):
+    return jnp.tanh(linear(p["mu"], h))
+
+
+def init_gaussian_head(rng, d_in, act_dim):
+    k1, k2 = jax.random.split(rng)
+    return {"mean": init_linear(k1, d_in, act_dim),
+            "log_std": init_linear(k2, d_in, act_dim)}
+
+
+def gaussian_head(p, h, log_std_min=-20.0, log_std_max=2.0):
+    mean = linear(p["mean"], h)
+    log_std = jnp.clip(linear(p["log_std"], h), log_std_min, log_std_max)
+    return mean, log_std

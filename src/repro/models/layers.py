@@ -1,0 +1,554 @@
+"""Neural-net layers for the backbone zoo: pure functions over param dicts.
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays; leaf names carry sharding semantics
+  (see sharding.py).  Layer stacks used with ``lax.scan`` hold leaves with a
+  leading layer dim.
+- Activations: x is (B, T, D); compute dtype from cfg (bf16), accumulations
+  and softmax in fp32.
+- Attention is written flash-style in pure jnp (q-block chunked, O(T·chunk)
+  memory) so the dry-run roofline reflects attributable XLA FLOPs; the Pallas
+  kernel (kernels/flash_attention) is the TPU-deploy path behind the same
+  signature.
+- KV caches: (B, S, Hkv, dh) with per-sequence ``lengths`` (B,); keys stored
+  post-RoPE.  Sliding-window layers use a rolling buffer of size ``window``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+from . import sharding as shd
+
+F32 = jnp.float32
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def _dense_init(rng, shape, in_axis_size, dtype=F32):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return jax.random.normal(rng, shape, dtype) * scale
+
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), F32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    xf = x.astype(F32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(d_head: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=F32) / d_head))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, dh); positions: broadcastable to (..., T)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)  # (dh/2,)
+    ang = positions[..., None].astype(F32) * inv  # (..., T, dh/2)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (...,T,1,dh/2)
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional sliding window + softcap), chunked flash-style jnp
+# ---------------------------------------------------------------------------
+def init_attention(rng, cfg: ModelConfig, d_model=None):
+    D = d_model or cfg.d_model
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": _dense_init(ks[0], (D, H, dh), D),
+        "wk": _dense_init(ks[1], (D, Hkv, dh), D),
+        "wv": _dense_init(ks[2], (D, Hkv, dh), D),
+        "wo": _dense_init(ks[3], (H, dh, D), H * dh),
+    }
+
+
+def _softcap(scores, cap: Optional[float]):
+    if cap is None:
+        return scores
+    return jnp.tanh(scores / cap) * cap
+
+
+def _attend_block(q, k, v, mask, softcap, scale):
+    """q:(B,Q,Hkv,G,dh) k/v:(B,S,Hkv,dh) mask:(B|1,1,1,Q,S) -> (B,Q,Hkv,G,dh).
+
+    fp32 softmax; einsum contraction keeps GQA groups without materializing
+    repeated KV heads.
+    """
+    scores = jnp.einsum("bqhgd,bshd->bhgqs", q, k, preferred_element_type=F32) * scale
+    scores = _softcap(scores, softcap)
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bqhgd", probs.astype(v.dtype), v)
+    return out
+
+
+def scan_or_unroll(body, carry, xs, unroll: bool):
+    """lax.scan, or a python loop producing identical results (used by the
+    dry-run cost variants: XLA cost_analysis counts while bodies once)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    import jax.tree_util as jtu
+    L = jtu.tree_leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(L):
+        x = jtu.tree_map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if ys and jtu.tree_leaves(ys[0]):
+        stacked = jtu.tree_map(lambda *zs: jnp.stack(zs), *ys)
+    else:
+        stacked = ys[0] if ys else None
+    return carry, stacked
+
+
+def multihead_attention(
+    q, k, v, *,
+    q_positions, k_positions,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    chunk_q: int = 512,
+    unroll: bool = False,
+):
+    """Chunked attention. q:(B,Tq,H,dh); k,v:(B,Tk,Hkv,dh). positions are
+    absolute token indices (B?,T) or (T,).  Returns (B,Tq,H,dh)."""
+    B, Tq, H, dh = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(dh)
+    qg = q.reshape(B, Tq, Hkv, G, dh)
+
+    qpos = jnp.broadcast_to(jnp.asarray(q_positions), (B, Tq)) if jnp.ndim(q_positions) <= 1 else q_positions
+    kpos = jnp.broadcast_to(jnp.asarray(k_positions), (B, Tk)) if jnp.ndim(k_positions) <= 1 else k_positions
+
+    def mask_for(qp):  # qp: (B, Q) -> (B,1,1,Q,S)
+        m = jnp.ones((B, 1, 1, qp.shape[1], Tk), bool)
+        if causal:
+            m &= (kpos[:, None, None, None, :] <= qp[:, None, None, :, None])
+        if window is not None:
+            m &= (kpos[:, None, None, None, :] > qp[:, None, None, :, None] - window)
+        return m
+
+    if Tq <= chunk_q or Tq % chunk_q != 0:
+        return _attend_block(qg, k, v, mask_for(qpos), softcap, scale).reshape(B, Tq, H, dh)
+
+    nblk = Tq // chunk_q
+    qb = qg.reshape(B, nblk, chunk_q, Hkv, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    qpb = qpos.reshape(B, nblk, chunk_q).transpose(1, 0, 2)
+
+    def body(c, blk):
+        qi, qpi = blk
+        o = _attend_block(qi, k, v, mask_for(qpi), softcap, scale)
+        return c, o
+
+    _, ob = scan_or_unroll(body, 0, (qb, qpb), unroll)
+    return ob.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, H, dh)
+
+
+def attention_train(params, x, cfg: ModelConfig, *, positions=None, causal=True,
+                    window=None, x_kv=None, kv_positions=None):
+    """Full-sequence attention (training / prefill compute). x:(B,T,D).
+    x_kv: cross-attention source (B,S,D) — bypasses causal/rope-on-q-only.
+
+    Sharding (§Perf repeat-KV layout): the grouped (B,T,Hkv,G,dh) form breaks
+    head-sharding whenever Hkv % tp != 0 — the SPMD partitioner replicates
+    every attention intermediate (scores at full H x T x S per device).  When
+    q-heads divide tp but kv-heads don't, we instead materialize the repeated
+    KV heads (tiny: (B,S,H,dh) bf16, sharded over heads) so scores stay
+    head-sharded end to end.  The returned (k, v) for the prefill cache are
+    the UNREPEATED heads."""
+    B, T, D = x.shape
+    dt = x.dtype
+    H, Hkv = cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    src = x if x_kv is None else x_kv
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+    if positions is None:
+        positions = jnp.arange(T)
+    if x_kv is None:
+        kv_pos = positions
+        q = apply_rope(q, jnp.broadcast_to(positions, (B, T)) if positions.ndim == 1 else positions, cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(kv_pos, (B, k.shape[1])) if kv_pos.ndim == 1 else kv_pos, cfg.rope_theta)
+        cross = False
+    else:
+        kv_pos = kv_positions if kv_positions is not None else jnp.arange(src.shape[1])
+        cross = True
+
+    tp = shd.tp_size()
+    # measured (§Perf B2 + bonus): the layout wins when the repeat factor is
+    # moderate (llama G=8: coll −10%) but loses when extreme (glm4 G=16:
+    # +15% — the repeated-KV materialization outweighs the sharding gain)
+    repeat_kv = (tp > 1 and H % tp == 0 and Hkv % tp != 0 and H != Hkv
+                 and H // Hkv <= 8)
+    if repeat_kv:
+        head_spec = P(shd.dp_axes(), None, shd.tp_axis(), None)
+        q = shd.constrain(q, head_spec)
+        kr = shd.constrain(jnp.repeat(k, H // Hkv, axis=2), head_spec)
+        vr = shd.constrain(jnp.repeat(v, H // Hkv, axis=2), head_spec)
+    else:
+        kr, vr = k, v
+    out = multihead_attention(
+        q, kr, vr,
+        q_positions=positions, k_positions=kv_pos,
+        causal=(causal and not cross), window=window,
+        softcap=cfg.softcap_attn, chunk_q=cfg.attn_chunk_q,
+        unroll=cfg.unroll,
+    )
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
+    return y, (k, v)
+
+
+def attention_decode(params, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
+                     window=None):
+    """One-token decode against a KV cache.  x:(B,1,D); cache:(B,S,Hkv,dh);
+    lengths:(B,) current context length.  Returns y, new_k, new_v.
+    Sliding-window layers use a rolling buffer (S == window)."""
+    B, _, D = x.shape
+    dt = x.dtype
+    S = cache_k.shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(dt))
+    pos = lengths[:, None]  # (B,1) absolute position of the new token
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    slot = (lengths % S)[:, None] if window is not None else lengths[:, None]
+    bidx = jnp.arange(B)[:, None]
+    new_k = cache_k.at[bidx, slot].set(k.astype(cache_k.dtype))
+    new_v = cache_v.at[bidx, slot].set(v.astype(cache_v.dtype))
+
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, dh)
+    scale = 1.0 / math.sqrt(dh)
+    sidx = jnp.arange(S)[None, :]  # (1,S)
+    if window is None:
+        valid = sidx <= lengths[:, None]  # slots 0..len written (incl. new)
+    else:
+        valid = sidx[None] >= 0  # rolling: all slots valid once warm
+        valid = (sidx < jnp.minimum(lengths[:, None] + 1, S))
+    mask = valid[:, None, None, None, :]
+    out = _attend_block(qg, new_k.astype(dt), new_v.astype(dt), mask, cfg.softcap_attn, scale)
+    y = jnp.einsum("bthk,hkd->btd", out.reshape(B, 1, H, dh), params["wo"].astype(dt))
+    return y, new_k, new_v
+
+
+def cross_attention_decode(params, x, cross_k, cross_v, cfg: ModelConfig):
+    """Decode-time cross-attention against precomputed (frozen) source KV."""
+    B, _, D = x.shape
+    dt = x.dtype
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(dt))
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    G = H // Hkv
+    qg = q.reshape(B, 1, Hkv, G, dh)
+    S = cross_k.shape[1]
+    mask = jnp.ones((B, 1, 1, 1, S), bool)
+    out = _attend_block(qg, cross_k.astype(dt), cross_v.astype(dt), mask, None, 1.0 / math.sqrt(dh))
+    return jnp.einsum("bthk,hkd->btd", out.reshape(B, 1, H, dh), params["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+def init_mlp(rng, cfg: ModelConfig, d_ff=None):
+    D, Fh = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(rng, 3)
+    return {
+        "wi": _dense_init(ks[0], (D, Fh), D),
+        "wg": _dense_init(ks[1], (D, Fh), D),
+        "wd": _dense_init(ks[2], (Fh, D), Fh),
+    }
+
+
+def mlp(params, x):
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, params["wi"].astype(dt))
+    g = jnp.einsum("btd,df->btf", x, params["wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    return jnp.einsum("btf,fd->btd", h, params["wd"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# MoE: router + capacity-based grouped dispatch (GShard-style, scatter form)
+# ---------------------------------------------------------------------------
+def init_moe(rng, cfg: ModelConfig):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": _dense_init(ks[0], (D, E), D),
+        "experts_wi": _dense_init(ks[1], (E, D, Fe), D),
+        "experts_wg": _dense_init(ks[2], (E, D, Fe), D),
+        "experts_wd": _dense_init(ks[3], (E, Fe, D), Fe),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * cfg.d_ff_expert)
+    return p
+
+
+def _dispatch_group(x_g, eidx_g, pos_g, wgt_g, keep_g, E, C):
+    """x_g:(S,D) eidx/pos/wgt/keep:(K,S) -> expert_in:(E,C,D), gather fn inputs."""
+    S, D = x_g.shape
+    flat_e = eidx_g.reshape(-1)
+    flat_p = pos_g.reshape(-1)
+    flat_keep = keep_g.reshape(-1)
+    xs = jnp.repeat(x_g[None], eidx_g.shape[0], axis=0).reshape(-1, D)
+    contrib = xs * flat_keep[:, None].astype(xs.dtype)
+    expert_in = jnp.zeros((E, C, D), x_g.dtype).at[flat_e, flat_p].add(contrib)
+    return expert_in
+
+
+def moe(params, x, cfg: ModelConfig, groups: int = 1, no_drop: bool = False,
+        capacity_factor: Optional[float] = None):
+    """x:(B,T,D) -> (y, aux).  Tokens flatten to (G, S_g, D) with G matching
+    the batch-shard count so dispatch stays shard-local under pjit (GShard
+    group-local capacity).  Routed experts use scatter-dispatch into per-expert
+    buffers of capacity C = ceil(S_g · top_k / E · capacity_factor) then a
+    single grouped einsum; overflow tokens are dropped (standard).  Decode
+    uses ``no_drop`` (full capacity) so serving is exact."""
+    B, T, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    S_total = B * T
+    G = groups if S_total % groups == 0 else 1
+    S_g = S_total // G
+    cf = capacity_factor if capacity_factor is not None else cfg.capacity_factor
+    C = max(int(math.ceil(S_g * K / E * cf)), 1)
+    C = min(C, S_g * K)
+    if no_drop:
+        C = S_g * K
+
+    xf = x.reshape(G, S_g, D)
+    logits = jnp.einsum("gsd,de->gse", xf, params["router"].astype(x.dtype)).astype(F32)
+    gates = jax.nn.softmax(logits, axis=-1)  # (G,S,E)
+    top_w, top_e = jax.lax.top_k(gates, K)  # (G,S,K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)  # renormalize
+
+    # position of each (choice, token) within its expert: cumsum of one-hots in
+    # (k-major, token-minor) assignment order — matches GShard.
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)  # (G,S,K,E)
+    ordered = onehot.transpose(0, 2, 1, 3).reshape(G, K * S_g, E)  # k-major
+    pos_in_e = jnp.cumsum(ordered, axis=1) - 1  # (G,KS,E)
+    pos_flat = jnp.sum(pos_in_e * ordered, axis=-1).reshape(G, K, S_g)  # (G,K,S)
+    keep = pos_flat < C
+    eidx = top_e.transpose(0, 2, 1)  # (G,K,S)
+    wgt = top_w.transpose(0, 2, 1)  # (G,K,S)
+    pos_clip = jnp.minimum(pos_flat, C - 1)
+
+    expert_in = jax.vmap(_dispatch_group, in_axes=(0, 0, 0, 0, 0, None, None))(
+        xf, eidx, pos_clip, wgt, keep, E, C
+    )  # (G,E,C,D)
+    expert_in = shd.constrain(expert_in, shd.batch_spec(None, None, None))
+
+    dt = x.dtype
+    h = jnp.einsum("gecd,edf->gecf", expert_in, params["experts_wi"].astype(dt))
+    g = jnp.einsum("gecd,edf->gecf", expert_in, params["experts_wg"].astype(dt))
+    h = jax.nn.silu(g) * h
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["experts_wd"].astype(dt))
+
+    # gather back: y[s] = sum_k w * expert_out[e_k, p_k]
+    def gather_group(eo, ei, pi, wi, ki):
+        o = eo[ei, pi]  # (K,S,D)
+        return jnp.sum(o * (wi * ki)[..., None].astype(o.dtype), axis=0)
+
+    y = jax.vmap(gather_group)(expert_out, eidx, pos_clip, wgt, keep)  # (G,S,D)
+    y = y.reshape(B, T, D)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(params["shared"], x)
+
+    # GShard aux load-balance loss: E * mean_e(frac_tokens_e * mean_gate_e)
+    frac = jnp.mean(jnp.sum(onehot.astype(F32), axis=2), axis=(0, 1)) / K  # (E,)
+    mgate = jnp.mean(gates, axis=(0, 1))
+    aux = E * jnp.sum(frac * mgate)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD block
+# ---------------------------------------------------------------------------
+def init_ssd(rng, cfg: ModelConfig):
+    D = cfg.d_model
+    H, Pd, G, N = cfg.ssm_n_heads, cfg.ssm_headdim, cfg.ssm_n_groups, cfg.d_state
+    Kc = cfg.conv_kernel
+    conv_dim = H * Pd + 2 * G * N
+    ks = jax.random.split(rng, 8)
+    return {
+        "wz": _dense_init(ks[0], (D, H, Pd), D),
+        "wx": _dense_init(ks[1], (D, H, Pd), D),
+        "wB": _dense_init(ks[2], (D, G, N), D),
+        "wC": _dense_init(ks[3], (D, G, N), D),
+        "wdt": _dense_init(ks[4], (D, H), D),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=F32)),
+        "dt_bias": jnp.zeros((H,), F32),
+        "conv_w": _dense_init(ks[5], (Kc, conv_dim), Kc),
+        "norm_scale": jnp.ones((H * Pd,), F32),
+        "out_proj": _dense_init(ks[6], (H, Pd, D), H * Pd),
+    }
+
+
+def _causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x:(B,T,C), w:(K,C); state:(B,K-1,C) or None.
+    Returns y:(B,T,C), new_state:(B,K-1,C)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i][None, None, :].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_proj(params, u, cfg: ModelConfig):
+    dt_ = u.dtype
+    z = jnp.einsum("btd,dhp->bthp", u, params["wz"].astype(dt_))
+    x = jnp.einsum("btd,dhp->bthp", u, params["wx"].astype(dt_))
+    Bs = jnp.einsum("btd,dgn->btgn", u, params["wB"].astype(dt_))
+    Cs = jnp.einsum("btd,dgn->btgn", u, params["wC"].astype(dt_))
+    dt = jnp.einsum("btd,dh->bth", u, params["wdt"].astype(dt_))
+    return z, x, Bs, Cs, dt
+
+
+def ssd_chunked(x, dt, A, Bs, Cs, chunk: int, state=None, unroll: bool = False,
+                intra_bf16: bool = False):
+    """SSD (Mamba-2 state-space dual) forward, scan over chunks.
+
+    x:(B,T,H,P) dt:(B,T,H) A:(H,) negative  Bs,Cs:(B,T,G,N).
+    Returns y:(B,T,H,P), final_state:(B,H,P,N).
+    """
+    B_, T, H, Pd = x.shape
+    G, N = Bs.shape[2], Bs.shape[3]
+    rep = H // G
+    Q = min(chunk, T)
+    T_orig = T
+    if T % Q:  # pad tail with dt=0 tokens (no state contribution)
+        pad = Q - T % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bs = jnp.pad(Bs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cs = jnp.pad(Cs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = T + pad
+    nC = T // Q
+
+    if state is None:
+        state = jnp.zeros((B_, H, Pd, N), F32)
+
+    xc = x.reshape(B_, nC, Q, H, Pd).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(B_, nC, Q, H).transpose(1, 0, 2, 3)
+    Bc = Bs.reshape(B_, nC, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cc = Cs.reshape(B_, nC, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    # intra-chunk compute dtype: bf16 halves the dominant (B,Q,Q,H) HBM
+    # traffic (scores/L/M); the inter-chunk state recurrence stays f32.
+    idt = jnp.bfloat16 if intra_bf16 else F32
+
+    def body(S_prev, inputs):
+        xq, dtq, Bq, Cq = inputs  # (B,Q,H,P),(B,Q,H),(B,Q,G,N)x2
+        dA = dtq.astype(F32) * A  # (B,Q,H) negative
+        cum = jnp.cumsum(dA, axis=1)  # (B,Q,H)
+        # intra-chunk: L[q,k] = exp(cum_q - cum_k) for q >= k.  Zero the
+        # masked (q<k) entries BEFORE exp: they are positive and can
+        # overflow, and where-after-exp leaks 0*inf = NaN into the backward.
+        tri = jnp.tril(jnp.ones((Q, Q), bool))[None, :, :, None]
+        # when intra_bf16: the whole (B,Q,Q,H) elementwise chain
+        # (sub/where/exp) runs in bf16 — it dominates HBM traffic, and the
+        # decay factors tolerate ~1e-2 relative error (documented knob).
+        cum_i = cum.astype(idt)
+        Ldiff = jnp.where(tri, cum_i[:, :, None, :] - cum_i[:, None, :, :],
+                          jnp.zeros((), idt))
+        L = jnp.where(tri, jnp.exp(Ldiff), jnp.zeros((), idt))
+        Bh = jnp.repeat(Bq, rep, axis=2)  # (B,Q,H,N)
+        Ch = jnp.repeat(Cq, rep, axis=2)
+        scores = jnp.einsum("bqhn,bkhn->bqkh", Ch.astype(idt), Bh.astype(idt),
+                            preferred_element_type=idt)
+        M = scores * L * dtq.astype(idt)[:, None, :, :]  # (B,Q,K,H)
+        y_diag = jnp.einsum("bqkh,bkhp->bqhp", M, xq.astype(idt),
+                            preferred_element_type=F32)
+        # inter-chunk: contribution of incoming state
+        decay_out = jnp.exp(cum)  # (B,Q,H)
+        y_off = jnp.einsum("bqhn,bhpn->bqhp", Ch.astype(F32), S_prev) * decay_out[..., None]
+        # state update
+        decay_last = jnp.exp(cum[:, -1:, :] - cum)  # (B,Q,H)
+        w = (decay_last * dtq.astype(F32))[..., None]  # (B,Q,H,1)
+        S_new = S_prev * jnp.exp(cum[:, -1, :])[..., None, None] + jnp.einsum(
+            "bqhn,bqhp->bhpn", Bh.astype(F32) * w, xq.astype(F32)
+        )
+        return S_new, (y_diag + y_off).astype(x.dtype)
+
+    state, yc = scan_or_unroll(body, state, (xc, dtc, Bc, Cc), unroll)
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B_, T, H, Pd)
+    return y[:, :T_orig], state
+
+
+def ssd_block_train(params, u, cfg: ModelConfig, conv_state=None, ssm_state=None):
+    """Full mamba2 mixer over a sequence. u:(B,T,D) -> y:(B,T,D), (conv_st, ssm_st)."""
+    B_, T, D = u.shape
+    H, Pd, G, N = cfg.ssm_n_heads, cfg.ssm_headdim, cfg.ssm_n_groups, cfg.d_state
+    z, x, Bs, Cs, dt = _ssd_proj(params, u, cfg)
+    # conv over [x, B, C]
+    xBC = jnp.concatenate(
+        [x.reshape(B_, T, H * Pd), Bs.reshape(B_, T, G * N), Cs.reshape(B_, T, G * N)], axis=-1
+    )
+    xBC, conv_state = _causal_conv1d(xBC, params["conv_w"], conv_state)
+    x = xBC[..., : H * Pd].reshape(B_, T, H, Pd)
+    Bs = xBC[..., H * Pd: H * Pd + G * N].reshape(B_, T, G, N)
+    Cs = xBC[..., H * Pd + G * N:].reshape(B_, T, G, N)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    y, ssm_state = ssd_chunked(x, dt, A, Bs, Cs, cfg.ssd_chunk, ssm_state,
+                               unroll=cfg.unroll, intra_bf16=cfg.ssd_bf16)
+    y = y.reshape(B_, T, H * Pd) * jax.nn.silu(z.reshape(B_, T, H * Pd))
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    return jnp.einsum("bthp,hpd->btd", y.reshape(B_, T, H, Pd), params["out_proj"].astype(u.dtype)), (conv_state, ssm_state)
+
+
+def ssd_block_decode(params, u, conv_state, ssm_state, cfg: ModelConfig):
+    """Single-token mamba2 step. u:(B,1,D); ssm_state:(B,H,P,N) fp32."""
+    B_, _, D = u.shape
+    H, Pd, G, N = cfg.ssm_n_heads, cfg.ssm_headdim, cfg.ssm_n_groups, cfg.d_state
+    z, x, Bs, Cs, dt = _ssd_proj(params, u, cfg)
+    xBC = jnp.concatenate(
+        [x.reshape(B_, 1, H * Pd), Bs.reshape(B_, 1, G * N), Cs.reshape(B_, 1, G * N)], axis=-1
+    )
+    xBC, conv_state = _causal_conv1d(xBC, params["conv_w"], conv_state)
+    x = xBC[..., : H * Pd].reshape(B_, H, Pd)
+    Bs = xBC[..., H * Pd: H * Pd + G * N].reshape(B_, G, N)
+    Cs = xBC[..., H * Pd + G * N:].reshape(B_, G, N)
+    dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])[:, 0]  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    rep = H // G
+    Bh = jnp.repeat(Bs, rep, axis=1).astype(F32)  # (B,H,N)
+    Ch = jnp.repeat(Cs, rep, axis=1).astype(F32)
+    dA = jnp.exp(dt * A)  # (B,H)
+    ssm_state = ssm_state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhpn", Bh * dt[..., None], x.astype(F32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, ssm_state)  # (B,H,P)
+    y = y.reshape(B_, 1, H * Pd).astype(u.dtype) * jax.nn.silu(z.reshape(B_, 1, H * Pd))
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    out = jnp.einsum("bthp,hpd->btd", y.reshape(B_, 1, H, Pd), params["out_proj"].astype(u.dtype))
+    return out, (conv_state, ssm_state)

@@ -1,0 +1,283 @@
+"""Small RL models: MLP (Mujoco-style state) and conv (Atari-style vision),
+plus an LSTM cell for recurrent agents — the paper's original model scale.
+
+Models are built by *factories* that close over static config and return
+``(init_fn, apply_fn)``; params are pure array pytrees (no static leaves), so
+they flow through jit / grad / tree_map / checkpointing unmodified.
+
+All follow the leading-dims protocol (paper §6.4): forward works with [], [B]
+or [T, B] leading dims via infer/restore_leading_dims.  All models accept
+(observation, prev_action, prev_reward) per paper §6.3; feed-forward models
+ignore the extras.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..core.leading_dims import infer_leading_dims, restore_leading_dims
+from .layers import _dense_init, F32
+from .heads import (
+    init_linear, linear, init_pg_head, pg_head, init_q_head, q_head,
+    init_mu_head, mu_head, init_gaussian_head, gaussian_head,
+)
+
+
+class Model(NamedTuple):
+    init: callable
+    apply: callable
+    initial_state: callable = lambda batch: None
+
+
+# ---------------------------------------------------------------------------
+# Trunks
+# ---------------------------------------------------------------------------
+
+def init_mlp_trunk(rng, d_in: int, hidden: Sequence[int]):
+    ks = jax.random.split(rng, len(hidden))
+    layers, d = [], d_in
+    for k, h in zip(ks, hidden):
+        layers.append(init_linear(k, d, h))
+        d = h
+    return layers
+
+
+def mlp_trunk(layers, x, act=jax.nn.tanh):
+    for lp in layers:
+        x = act(linear(lp, x))
+    return x
+
+
+def conv_out_hw(img_hw, kernels=(8, 4, 3), strides=(4, 2, 1)):
+    h, w = img_hw
+    for kz, st in zip(kernels, strides):
+        h = (h - kz) // st + 1
+        w = (w - kz) // st + 1
+    return h, w
+
+
+def init_conv_trunk(rng, in_ch: int, img_hw=(84, 84),
+                    channels=(32, 64, 64), kernels=(8, 4, 3), strides=(4, 2, 1),
+                    d_out: int = 512):
+    ks = jax.random.split(rng, len(channels) + 1)
+    convs, c = [], in_ch
+    for k, ch, kz in zip(ks, channels, kernels):
+        convs.append({"w": _dense_init(k, (kz, kz, c, ch), kz * kz * c)})
+        c = ch
+    h, w = conv_out_hw(img_hw, kernels, strides)
+    return {"convs": convs, "proj": init_linear(ks[-1], h * w * c, d_out)}
+
+
+def conv_trunk(p, x, strides=(4, 2, 1)):
+    """x: (B, H, W, C) float in [0,1]."""
+    for cp, st in zip(p["convs"], strides):
+        x = jax.lax.conv_general_dilated(
+            x, cp["w"].astype(x.dtype), (st, st), "VALID",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = jax.nn.relu(x)
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(linear(p["proj"], x))
+
+
+# ---------------------------------------------------------------------------
+# LSTM cell (recurrent agents, paper §6.3) — pure jnp, CuDNN-free
+# ---------------------------------------------------------------------------
+
+def init_lstm(rng, d_in: int, d_hidden: int):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "wx": _dense_init(k1, (d_in, 4 * d_hidden), d_in),
+        "wh": _dense_init(k2, (d_hidden, 4 * d_hidden), d_hidden),
+        "b": jnp.zeros((4 * d_hidden,), F32),
+    }
+
+
+def lstm_step(p, x, state):
+    """x: (B, d_in); state: (h, c) each (B, d_hidden)."""
+    h, c = state
+    gates = x @ p["wx"].astype(x.dtype) + h @ p["wh"].astype(x.dtype) + p["b"].astype(x.dtype)
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (h, c)
+
+
+def lstm_seq(p, xs, state):
+    """xs: (T, B, d_in) -> (T, B, H), final state.  lax.scan over time."""
+    def body(st, x):
+        h, st = lstm_step(p, x, st)
+        return st, h
+    state, hs = jax.lax.scan(body, state, xs)
+    return hs, state
+
+
+def lstm_zero_state(d_hidden: int, batch: int, dtype=F32):
+    return (jnp.zeros((batch, d_hidden), dtype), jnp.zeros((batch, d_hidden), dtype))
+
+
+# ---------------------------------------------------------------------------
+# Model factories
+# ---------------------------------------------------------------------------
+
+def make_pg_mlp(obs_dim: int, n_actions: int, hidden=(64, 64)) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        trunk = init_mlp_trunk(k1, obs_dim, hidden)
+        return {"trunk": trunk, "head": init_pg_head(k2, hidden[-1], n_actions)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 1)
+        h = mlp_trunk(params["trunk"], obs)
+        logits, value = pg_head(params["head"], h)
+        return restore_leading_dims((logits, value), lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_pg_conv(in_ch: int, n_actions: int, img_hw=(84, 84),
+                 channels=(32, 64, 64), kernels=(8, 4, 3), strides=(4, 2, 1),
+                 d_out=512) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_conv_trunk(k1, in_ch, img_hw, channels, kernels,
+                                         strides, d_out),
+                "head": init_pg_head(k2, d_out, n_actions)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 3)
+        h = conv_trunk(params["trunk"], obs.astype(jnp.float32), strides)
+        logits, value = pg_head(params["head"], h)
+        return restore_leading_dims((logits, value), lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_q_mlp(obs_dim: int, n_actions: int, hidden=(64, 64), *,
+               dueling=False, n_atoms=0) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_mlp_trunk(k1, obs_dim, hidden),
+                "head": init_q_head(k2, hidden[-1], n_actions,
+                                    dueling=dueling, n_atoms=n_atoms)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 1)
+        h = mlp_trunk(params["trunk"], obs, act=jax.nn.relu)
+        q = q_head(params["head"], h, n_actions, dueling=dueling, n_atoms=n_atoms)
+        return restore_leading_dims(q, lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_q_conv(in_ch: int, n_actions: int, img_hw=(84, 84), *,
+                dueling=False, n_atoms=0,
+                channels=(32, 64, 64), kernels=(8, 4, 3), strides=(4, 2, 1),
+                d_out=512) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_conv_trunk(k1, in_ch, img_hw, channels, kernels,
+                                         strides, d_out),
+                "head": init_q_head(k2, d_out, n_actions,
+                                    dueling=dueling, n_atoms=n_atoms)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 3)
+        h = conv_trunk(params["trunk"], obs.astype(jnp.float32), strides)
+        q = q_head(params["head"], h, n_actions, dueling=dueling, n_atoms=n_atoms)
+        return restore_leading_dims(q, lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_recurrent_q(obs_dim_or_ch, n_actions: int, *, conv=False, d_lstm=256,
+                     img_hw=(84, 84), dueling=True, trunk_hidden=(256,),
+                     channels=(32, 64, 64), kernels=(8, 4, 3),
+                     strides=(4, 2, 1), d_conv_out=512) -> Model:
+    """R2D1-style recurrent Q model: trunk -> [h, prev_a_onehot, prev_r] -> LSTM -> Q.
+
+    apply() is time-major: (T, B, ...) observation, returns (q (T,B,A), state).
+    """
+    def init(rng):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        trunk = (init_conv_trunk(k1, obs_dim_or_ch, img_hw, channels, kernels,
+                                 strides, d_conv_out) if conv
+                 else init_mlp_trunk(k1, obs_dim_or_ch, trunk_hidden))
+        d_trunk = d_conv_out if conv else trunk_hidden[-1]
+        return {"trunk": trunk,
+                "lstm": init_lstm(k2, d_trunk + n_actions + 1, d_lstm),
+                "head": init_q_head(k3, d_lstm, n_actions, dueling=dueling)}
+
+    def apply(params, observation, prev_action, prev_reward, state):
+        T, B = observation.shape[:2]
+        obs = observation.reshape((T * B,) + observation.shape[2:])
+        h = (conv_trunk(params["trunk"], obs.astype(jnp.float32), strides) if conv
+             else mlp_trunk(params["trunk"], obs, act=jax.nn.relu))
+        h = h.reshape(T, B, -1)
+        pa = jax.nn.one_hot(prev_action.astype(jnp.int32), n_actions, dtype=h.dtype)
+        xs = jnp.concatenate([h, pa, prev_reward[..., None].astype(h.dtype)], axis=-1)
+        hs, state = lstm_seq(params["lstm"], xs, state)
+        q = q_head(params["head"], hs, n_actions, dueling=dueling)
+        return q, state
+
+    return Model(init, apply, initial_state=lambda batch: lstm_zero_state(d_lstm, batch))
+
+
+# ---------------------------------------------------------------------------
+# Continuous control (DDPG/TD3/SAC): separate actor + critic factories
+# ---------------------------------------------------------------------------
+
+def make_ddpg_actor(obs_dim: int, act_dim: int, hidden=(256, 256)) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_mlp_trunk(k1, obs_dim, hidden),
+                "head": init_mu_head(k2, hidden[-1], act_dim)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 1)
+        h = mlp_trunk(params["trunk"], obs, act=jax.nn.relu)
+        mu = mu_head(params["head"], h)
+        return restore_leading_dims(mu, lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_sac_actor(obs_dim: int, act_dim: int, hidden=(256, 256)) -> Model:
+    def init(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_mlp_trunk(k1, obs_dim, hidden),
+                "head": init_gaussian_head(k2, hidden[-1], act_dim)}
+
+    def apply(params, observation, prev_action=None, prev_reward=None):
+        lead, T, B, obs = infer_leading_dims(observation, 1)
+        h = mlp_trunk(params["trunk"], obs, act=jax.nn.relu)
+        mean, log_std = gaussian_head(params["head"], h)
+        return restore_leading_dims((mean, log_std), lead, T, B)
+
+    return Model(init, apply)
+
+
+def make_q_critic(obs_dim: int, act_dim: int, hidden=(256, 256), n_critics=2) -> Model:
+    """Twin Q critics (TD3/SAC); q(s, a) -> (n_critics, ...) stacked."""
+    def init_one(rng):
+        k1, k2 = jax.random.split(rng)
+        return {"trunk": init_mlp_trunk(k1, obs_dim + act_dim, hidden),
+                "head": init_linear(k2, hidden[-1], 1)}
+
+    def init(rng):
+        return jax.vmap(init_one)(jax.random.split(rng, n_critics))
+
+    def apply_one(params, sa):
+        h = mlp_trunk(params["trunk"], sa, act=jax.nn.relu)
+        return linear(params["head"], h)[..., 0]
+
+    def apply(params, observation, action):
+        lead, T, B, obs = infer_leading_dims(observation, 1)
+        _, _, _, act = infer_leading_dims(action, 1)
+        sa = jnp.concatenate([obs, act], axis=-1)
+        qs = jax.vmap(apply_one, in_axes=(0, None))(params, sa)  # (n_critics, T*B)
+        qs = restore_leading_dims(jnp.moveaxis(qs, 0, -1), lead, T, B)  # (..., n_c)
+        return jnp.moveaxis(qs, -1, 0)  # (n_critics, *lead)
+
+    return Model(init, apply)

@@ -1,0 +1,183 @@
+"""Sharding rules: logical param/activation axes → mesh axes.
+
+Param trees are nested dicts with conventional leaf names; specs are derived
+from (path, shape) by `param_pspecs`, so init code and sharding rules cannot
+drift.  Activation constraints go through `constrain`, which no-ops when no
+mesh is installed (CPU smoke tests see 1 device and zero sharding machinery).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_GLOBAL_MESH: Optional[Mesh] = None
+_DP_AXES: tuple = ("data",)
+_TP_AXIS: str = "model"
+
+
+def set_global_mesh(mesh: Optional[Mesh], dp_axes=("data",), tp_axis="model"):
+    global _GLOBAL_MESH, _DP_AXES, _TP_AXIS
+    _GLOBAL_MESH = mesh
+    _DP_AXES = tuple(dp_axes)
+    _TP_AXIS = tp_axis
+
+
+def get_global_mesh() -> Optional[Mesh]:
+    return _GLOBAL_MESH
+
+
+def dp_axes() -> tuple:
+    return _DP_AXES
+
+
+def tp_axis() -> str:
+    return _TP_AXIS
+
+
+def tp_size() -> int:
+    if _GLOBAL_MESH is None:
+        return 1
+    return _GLOBAL_MESH.shape[_TP_AXIS]
+
+
+def n_batch_shards() -> int:
+    if _GLOBAL_MESH is None:
+        return 1
+    n = 1
+    for a in _DP_AXES:
+        n *= _GLOBAL_MESH.shape[a]
+    return n
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint when a mesh is installed; identity otherwise."""
+    if _GLOBAL_MESH is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_GLOBAL_MESH, spec))
+
+
+def batch_spec(*trailing) -> P:
+    """P over batch dim: batch → all dp axes."""
+    return P(_DP_AXES, *trailing)
+
+
+# ---------------------------------------------------------------------------
+# Param partition rules.  Leaf-name conventions (see layers.py init fns):
+#   tok_embed (V, D)            -> (tp, None)      vocab-sharded embedding
+#   lm_head   (D, V)            -> (None, tp)
+#   wq/wz/wx  (D, H, dh)        -> (None, tp, None)   [heads shardable]
+#   wk/wv     (D, Hkv, dh)      -> (None, tp|None, None)
+#   wo        (H, dh, D)        -> (tp, None, None)
+#   wi/wg     (D, F)            -> (None, tp)
+#   wd        (F, D)            -> (tp, None)
+#   experts_wi/wg (E, D, F)     -> (None, None, tp)   [per-expert TP]
+#   experts_wd    (E, F, D)     -> (None, tp, None)
+#   wB/wC     (D, G, N)         -> replicated (G small)
+#   router / norms / scalars    -> replicated
+# A leading scan (layer-stack) dim gets a prepended None automatically when the
+# leaf rank exceeds the rule rank.
+# ---------------------------------------------------------------------------
+_RULES = {
+    "tok_embed": ("model", None),
+    "pos_embed": (None, None),
+    "lm_head": (None, "model"),
+    "value_head": (None, None),
+    "wq": (None, "model", None),
+    "wk": (None, "KV", None),
+    "wv": (None, "KV", None),
+    "wo": ("model", None, None),
+    "wz": (None, "model", None),
+    "wx": (None, "model", None),
+    "wdt": (None, "model"),
+    "wB": (None, None, None),
+    "wC": (None, None, None),
+    "out_proj": ("model", None, None),
+    "wi": (None, "model"),
+    "wg": (None, "model"),
+    "wd": ("model", None),
+    "experts_wi": (None, None, "model"),
+    "experts_wg": (None, None, "model"),
+    "experts_wd": (None, "model", None),
+    "router": (None, None),
+}
+
+
+_HEAD_GATED = {"wq", "wo", "wz", "wx", "wdt", "out_proj"}
+
+
+def _rule_for(name: str, shape, n_heads_divisible: bool, kv_divisible: bool):
+    base = _RULES.get(name)
+    if base is None:
+        return (None,) * len(shape)  # norms, biases, A_log, conv, scalars
+    spec = []
+    for ax in base:
+        if ax == "KV":
+            spec.append("model" if kv_divisible else None)
+        elif ax == "model" and name in _HEAD_GATED:
+            spec.append("model" if n_heads_divisible else None)
+        else:
+            spec.append(ax)
+    return tuple(spec)
+
+
+def param_pspecs(params, cfg, tp: Optional[int] = None,
+                 fsdp_axes: Optional[Sequence[str]] = None):
+    """Build a PartitionSpec tree mirroring ``params`` from leaf names.
+
+    ``fsdp_axes``: additionally shard each *named weight* leaf over these mesh
+    axes on its largest still-unsharded (non-stacked) dim — ZeRO-3/FSDP; XLA
+    inserts the just-in-time all-gather at each layer's use site inside the
+    scan, so resident param bytes drop by the fsdp factor.  Small unnamed
+    leaves (norm scales, biases) stay replicated.
+    """
+    tp = tp or tp_size()
+    heads_ok = cfg.n_heads % tp == 0
+    kv_ok = cfg.n_kv_heads % tp == 0
+    ssm_ok = (cfg.ssm_n_heads % tp == 0) if cfg.d_state else True
+    mesh = _GLOBAL_MESH
+    fsdp_size = 1
+    if fsdp_axes and mesh is not None:
+        for a in fsdp_axes:
+            fsdp_size *= mesh.shape[a]
+    def spec_leaf(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        rank = len(leaf.shape)
+        ok = heads_ok
+        if name in ("wz", "wx", "wdt", "out_proj") and cfg.d_state:
+            ok = ssm_ok
+        named = name in _RULES
+        rule = list(_rule_for(name, leaf.shape, ok, kv_ok))
+        n_pad = 0
+        if len(rule) < rank:  # stacked scan dim(s) in front
+            n_pad = rank - len(rule)
+            rule = [None] * n_pad + rule
+        rule = rule[:rank]
+        # drop sharding on dims that don't divide
+        for i, (dim, ax) in enumerate(zip(leaf.shape, rule)):
+            if ax is not None and (tp <= 1 or dim % tp != 0):
+                rule[i] = None
+        if tp <= 1:
+            rule = [None] * rank
+        # FSDP: largest unsharded non-stacked dim of named weights
+        if named and fsdp_axes and fsdp_size > 1:
+            cands = [i for i in range(n_pad, rank)
+                     if rule[i] is None and leaf.shape[i] % fsdp_size == 0]
+            if cands:
+                i = max(cands, key=lambda j: leaf.shape[j])
+                rule[i] = tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]
+        return P(*rule)
+
+    return jax.tree_util.tree_map_with_path(spec_leaf, params)
+
+
+def make_shardings(pspec_tree, mesh: Optional[Mesh] = None):
+    mesh = mesh or _GLOBAL_MESH
+    if mesh is None:
+        return None
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspec_tree)

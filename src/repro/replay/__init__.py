@@ -1,0 +1,19 @@
+"""Replay buffers (paper §1.1): n-step returns, prioritized (sum tree),
+sequence replay with periodic recurrent-state storage, frame-based dedup.
+
+Two substrates:
+- ``host``: numpy ring buffers (the paper's shared-memory buffers; feed the
+  asynchronous runner).  In-place writes via namedarraytuple __setitem__.
+- ``device``: pure-functional JAX buffers usable *inside* jit — the TPU-native
+  path where sampling, replay and optimization fuse into one compiled step.
+"""
+from .sum_tree import SumTree
+from .host import (
+    TransitionSamples,
+    SequenceSamples,
+    UniformReplayBuffer,
+    PrioritizedReplayBuffer,
+    SequenceReplayBuffer,
+    FrameReplayBuffer,
+)
+from . import device

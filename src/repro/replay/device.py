@@ -1,0 +1,122 @@
+"""Device-resident, pure-functional replay — the TPU-native adaptation.
+
+The host buffers mirror the paper's shared-memory design; this module is the
+beyond-paper equivalent for the fused pipeline: buffer state is a pytree of
+jnp arrays, insert/sample are pure functions, so an entire
+collect->insert->sample->update step compiles to ONE program (no host
+round-trip).  Prioritized sampling uses a jnp sum-tree with fixed-depth
+descent (mirrored by the Pallas kernel in kernels/sum_tree).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ReplayState(NamedTuple):
+    storage: Any          # leaves (N, ...) flat slot-major
+    cursor: jnp.ndarray   # int32 next write slot
+    filled: jnp.ndarray   # int32 number of valid slots
+    tree: jnp.ndarray     # (2*size,) sum tree (all-ones when uniform)
+
+
+def _tree_size(capacity: int) -> int:
+    size = 1
+    while size < capacity:
+        size *= 2
+    return size
+
+
+def init_replay(example, capacity: int) -> ReplayState:
+    """example: transition pytree with leaves shaped (...,) (no batch dim)."""
+    storage = jax.tree_util.tree_map(
+        lambda x: jnp.zeros((capacity,) + jnp.shape(x), jnp.asarray(x).dtype), example)
+    size = _tree_size(capacity)
+    return ReplayState(
+        storage=storage,
+        cursor=jnp.zeros((), jnp.int32),
+        filled=jnp.zeros((), jnp.int32),
+        tree=jnp.zeros((2 * size,), jnp.float32),
+    )
+
+
+def insert(state: ReplayState, batch, priorities=None) -> ReplayState:
+    """batch leaves: (B, ...); priorities (B,) or None (max-priority init)."""
+    B = jax.tree_util.tree_leaves(batch)[0].shape[0]
+    cap = jax.tree_util.tree_leaves(state.storage)[0].shape[0]
+    idx = (state.cursor + jnp.arange(B)) % cap
+    storage = jax.tree_util.tree_map(
+        lambda s, b: s.at[idx].set(b.astype(s.dtype)), state.storage, batch)
+    if priorities is None:
+        cur_max = jnp.maximum(jnp.max(state.tree[_tree_size(cap):]), 1.0)
+        priorities = jnp.full((B,), cur_max, jnp.float32)
+    tree = tree_set(state.tree, idx, priorities)
+    return ReplayState(
+        storage=storage,
+        cursor=(state.cursor + B) % cap,
+        filled=jnp.minimum(state.filled + B, cap),
+        tree=tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# jnp sum tree (reference semantics for kernels/sum_tree)
+# ---------------------------------------------------------------------------
+
+def tree_set(tree: jnp.ndarray, idx: jnp.ndarray, priorities: jnp.ndarray):
+    """Functional leaf update + upward propagation (fixed depth)."""
+    size = tree.shape[0] // 2
+    node = idx + size
+    tree = tree.at[node].set(priorities.astype(tree.dtype))
+    depth = size.bit_length() - 1
+    for _ in range(depth):
+        parent = node // 2
+        left = tree[2 * parent]
+        right = tree[2 * parent + 1]
+        tree = tree.at[parent].set(left + right)
+        node = parent
+    return tree
+
+
+def tree_sample(tree: jnp.ndarray, rng, batch: int):
+    """Stratified proportional sampling; returns (idx, prob)."""
+    size = tree.shape[0] // 2
+    depth = size.bit_length() - 1
+    total = tree[1]
+    u = (jnp.arange(batch) + jax.random.uniform(rng, (batch,))) / batch * total
+    node = jnp.ones((batch,), jnp.int32)
+    for _ in range(depth):
+        left = 2 * node
+        lval = tree[left]
+        go_right = u >= lval
+        u = jnp.where(go_right, u - lval, u)
+        node = jnp.where(go_right, left + 1, left)
+    leaf = node - size
+    prob = tree[node] / jnp.maximum(total, 1e-9)
+    return leaf, prob
+
+
+def sample(state: ReplayState, rng, batch: int, *, uniform: bool = False,
+           beta: float = 0.4):
+    """Returns (batch_tree, idx, is_weights)."""
+    cap = jax.tree_util.tree_leaves(state.storage)[0].shape[0]
+    if uniform:
+        idx = jax.random.randint(rng, (batch,), 0, jnp.maximum(state.filled, 1))
+        # map ages onto the ring (newest-first not required for uniform)
+        idx = (state.cursor - 1 - idx) % cap
+        w = jnp.ones((batch,), jnp.float32)
+    else:
+        idx, prob = tree_sample(state.tree, rng, batch)
+        n = jnp.maximum(state.filled, 1).astype(jnp.float32)
+        w = (n * jnp.maximum(prob, 1e-12)) ** (-beta)
+        w = w / jnp.maximum(jnp.max(w), 1e-12)
+    out = jax.tree_util.tree_map(lambda s: s[idx], state.storage)
+    return out, idx, w
+
+
+def update_priorities(state: ReplayState, idx, td_errors, *, alpha=0.6,
+                      eps=1e-6) -> ReplayState:
+    pr = (jnp.abs(td_errors) + eps) ** alpha
+    return state._replace(tree=tree_set(state.tree, idx, pr))

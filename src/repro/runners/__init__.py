@@ -1,0 +1,4 @@
+"""Runners (paper §6.1): connect sampler + agent + algorithm, manage the
+training loop, diagnostics, and checkpoints."""
+from .minibatch import OnPolicyRunner, OffPolicyRunner
+from .async_rl import AsyncRunner, AsyncR2D1Runner

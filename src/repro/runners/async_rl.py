@@ -1,0 +1,219 @@
+"""Asynchronous sampling/optimization (paper §2.3, Fig. 3) — TPU adaptation.
+
+rlpyt runs sampler and optimizer in separate processes around a shared-memory
+replay buffer with a double buffer + memory-copier + read/write lock.  Here
+the sampler's compiled rollout and the optimizer's compiled update are
+independent device programs; the HOST numpy replay buffer (replay/host.py)
+plays the shared-memory buffer, and JAX's async dispatch gives the overlap:
+while the device executes collect/update, the host thread copies the
+previous batch into the ring (the memory-copier role) — no locks needed in a
+single-controller process.
+
+The paper's control knobs are kept exactly:
+- ``replay_ratio``: consumption/generation rate; the optimizer throttles when
+  ahead (paper: "the optimizer will be throttled not to exceed this value").
+- actor parameter refresh each sampler batch (all actors share params).
+
+Modes: transition replay (DQN/QPG) and sequence replay (R2D1) with periodic
+recurrent-state storage and R2D2 priority updates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..replay.host import (TransitionSamples, SequenceSamples,
+                           UniformReplayBuffer, PrioritizedReplayBuffer,
+                           SequenceReplayBuffer)
+from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from ..utils.logger import Logger
+
+F32 = jnp.float32
+
+
+def _host(x):
+    return jax.tree_util.tree_map(lambda l: np.asarray(jax.device_get(l)), x)
+
+
+class AsyncRunner:
+    """Transition-mode async runner (DQN variants, DDPG/TD3/SAC)."""
+
+    def __init__(self, sampler, algo, buffer, *, batch_size: int,
+                 replay_ratio: float = 1.0, min_replay: int = 1000,
+                 n_iterations: int = 100, log_interval: int = 10,
+                 logger: Optional[Logger] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
+                 agent_state_kwargs: Optional[dict] = None):
+        self.sampler, self.algo, self.buffer = sampler, algo, buffer
+        self.batch_size = batch_size
+        self.replay_ratio = replay_ratio
+        self.min_replay = min_replay
+        self.n_iterations = n_iterations
+        self.log_interval = log_interval
+        self.logger = logger or Logger()
+        self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
+        self.agent_state_kwargs = agent_state_kwargs or {}
+        self._collect = jax.jit(self.sampler.collect)
+        self._update = jax.jit(self.algo.update)
+        self._rng_np = np.random.default_rng(0)
+
+    # -- host-side plumbing -------------------------------------------------
+    def _append(self, batch):
+        b = _host(batch)
+        samples = TransitionSamples(
+            observation=b.observation, action=b.action, reward=b.reward,
+            done=b.done, timeout=b.timeout)
+        self.buffer.append_samples(samples, next_obs=b.next_observation
+                                   if self.buffer.store_next_obs else None)
+
+    def _device_batch(self, hb):
+        batch = {
+            "observation": jnp.asarray(hb["observation"]),
+            "action": jnp.asarray(hb["action"]),
+            "return_": jnp.asarray(hb["return_"]),
+            "bootstrap": jnp.asarray(hb["bootstrap"]),
+            "next_observation": jnp.asarray(hb["next_observation"]),
+            "n_used": jnp.asarray(hb["n_used"]),
+            "is_weights": jnp.asarray(hb["is_weights"]),
+        }
+        return batch, hb["indices"]
+
+    def run(self, rng, params=None, restore: bool = False):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        if params is None:
+            params = self.sampler.agent.init_params(k1)
+        train_state = self.algo.init_train_state(k2, params)
+        sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+        start_iter = 0
+        if restore and self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
+            train_state, manifest = restore_checkpoint(self.ckpt_dir, train_state)
+            start_iter = manifest["extra"].get("iteration", 0)
+
+        generated, consumed = 0, 0
+        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
+        t0 = time.time()
+        last_info = None
+        for it in range(start_iter, self.n_iterations):
+            rng, _ = jax.random.split(rng)
+            # sampler turn (actor uses CURRENT params — refresh per batch)
+            sampler_state, batch = self._collect(train_state.params, sampler_state)
+            self._append(batch)
+            generated += steps_per_iter
+
+            # optimizer turn: throttle to replay_ratio
+            while (len(self.buffer) >= self.min_replay and
+                   (consumed + self.batch_size) / max(generated, 1)
+                   <= self.replay_ratio):
+                hb = self.buffer.sample_batch(self.batch_size, self._rng_np)
+                dbatch, idx = self._device_batch(hb)
+                rng, k = jax.random.split(rng)
+                train_state, info = self._update(train_state, dbatch, k)
+                last_info = info
+                consumed += self.batch_size
+                if isinstance(self.buffer, PrioritizedReplayBuffer):
+                    self.buffer.update_priorities(
+                        idx, np.asarray(jax.device_get(info.extra["td_abs"])))
+
+            if (it + 1) % self.log_interval == 0 and last_info is not None:
+                stats = self.sampler.traj_stats(sampler_state)
+                sampler_state = self.sampler.reset_stats(sampler_state)
+                sps = steps_per_iter * self.log_interval / max(
+                    time.time() - t0, 1e-9)
+                t0 = time.time()
+                extra = {k_: v for k_, v in last_info.extra.items()
+                         if jnp.ndim(v) == 0}
+                self.logger.record((it + 1) * steps_per_iter, {
+                    "iter": it + 1, "loss": last_info.loss,
+                    "replay_ratio_actual": consumed / max(generated, 1),
+                    "samples_per_sec": sps,
+                    **{k_: float(v) for k_, v in stats.items()}, **extra})
+            if self.ckpt_dir and self.ckpt_interval and \
+                    (it + 1) % self.ckpt_interval == 0:
+                save_checkpoint(self.ckpt_dir, it + 1, train_state,
+                                extra={"iteration": it + 1,
+                                       "buffer_t": self.buffer.t,
+                                       "buffer_filled": self.buffer.filled})
+        return train_state, sampler_state, last_info
+
+
+class AsyncR2D1Runner(AsyncRunner):
+    """Sequence-mode async runner: R2D1 (paper §3.2).
+
+    The sampler horizon must equal the replay ``state_interval`` so the
+    recurrent state captured at batch start is the stored initial state for
+    the block (periodic storage).  Priorities update with the R2D2 mixture.
+    """
+
+    def __init__(self, sampler, algo, buffer: SequenceReplayBuffer, **kw):
+        super().__init__(sampler, algo, buffer, **kw)
+        assert sampler.horizon == buffer.state_interval, (
+            "horizon must equal state_interval for stored-state alignment")
+
+    def _append_seq(self, batch, init_state):
+        b = _host(batch)
+        st = _host(init_state)
+        samples = SequenceSamples(
+            observation=b.observation, prev_action=b.prev_action,
+            prev_reward=b.prev_reward, action=b.action, reward=b.reward,
+            done=b.done, init_state=st)
+        self.buffer.append_samples(samples)
+
+    def run(self, rng, params=None, restore: bool = False):
+        k1, k2, k3 = jax.random.split(rng, 3)
+        if params is None:
+            params = self.sampler.agent.init_params(k1)
+        train_state = self.algo.init_train_state(k2, params)
+        sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+
+        generated, consumed = 0, 0
+        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
+        t0 = time.time()
+        last_info = None
+        for it in range(self.n_iterations):
+            # recurrent state at block start -> stored with the block
+            init_state = self.sampler.full_agent_state(sampler_state)["lstm"]
+            sampler_state, batch = self._collect(train_state.params, sampler_state)
+            self._append_seq(batch, init_state)
+            generated += steps_per_iter
+
+            while (self.buffer.tree.total > 0 and
+                   len_filled(self.buffer) >= self.min_replay and
+                   (consumed + self.batch_size * self.buffer.seq_len)
+                   / max(generated, 1) <= self.replay_ratio):
+                hb = self.buffer.sample_batch(self.batch_size, self._rng_np)
+                dbatch = {
+                    "sequence": jax.tree_util.tree_map(jnp.asarray, hb["sequence"]),
+                    "init_state": jax.tree_util.tree_map(jnp.asarray,
+                                                         hb["init_state"]),
+                    "is_weights": jnp.asarray(hb["is_weights"]),
+                }
+                rng, k = jax.random.split(rng)
+                train_state, info = self._update(train_state, dbatch, k)
+                last_info = info
+                consumed += self.batch_size * self.buffer.seq_len
+                self.buffer.update_priorities(
+                    hb["indices"],
+                    np.asarray(jax.device_get(info.extra["td_abs_max"])),
+                    np.asarray(jax.device_get(info.extra["td_abs_mean"])))
+
+            if (it + 1) % self.log_interval == 0 and last_info is not None:
+                stats = self.sampler.traj_stats(sampler_state)
+                sampler_state = self.sampler.reset_stats(sampler_state)
+                sps = steps_per_iter * self.log_interval / max(
+                    time.time() - t0, 1e-9)
+                t0 = time.time()
+                self.logger.record((it + 1) * steps_per_iter, {
+                    "iter": it + 1, "loss": last_info.loss,
+                    "replay_ratio_actual": consumed / max(generated, 1),
+                    "samples_per_sec": sps,
+                    **{k_: float(v) for k_, v in stats.items()},
+                    "q_mean": last_info.extra["q_mean"]})
+        return train_state, sampler_state, last_info
+
+
+def len_filled(buffer) -> int:
+    return buffer.filled * buffer.B

@@ -1,0 +1,5 @@
+"""Samplers (paper §2.1): serial, sharded (parallel-GPU analogue), and
+alternating (double-buffered) — all producing identical (T, B) batches."""
+from .serial import SerialSampler, RolloutBatch
+from .sharded import ShardedSampler
+from .alternating import AlternatingSampler

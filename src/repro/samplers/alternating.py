@@ -1,0 +1,137 @@
+"""Alternating sampler (paper §2.1 'Alternating-GPU').
+
+rlpyt splits workers into two groups: one steps environments while the other
+awaits batched action selection, hiding env-step latency behind the agent.
+On TPU both groups live in one compiled program as two INDEPENDENT dependency
+chains, phase-shifted by half a step: while group A's env shard consumes its
+pending action, group B's action-selection matmuls run — XLA's async dispatch
+and the latency-hiding scheduler overlap them exactly as the semaphore
+ping-pong did on GPU.
+
+Mechanically: state holds a *pending action* per group; one alternating step
+= (apply A's pending action to A's envs) || (select B's next action), then
+swap roles.  A full collect() of horizon T runs 2T alternating half-steps so
+each group contributes T transitions; outputs interleave to the same (T, B)
+layout the other samplers produce.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .serial import SerialSampler, SamplerState, RolloutBatch
+
+F32 = jnp.float32
+
+
+class AltState(NamedTuple):
+    a: SamplerState          # group A (even env indices)
+    b: SamplerState          # group B
+    pending_a: Any           # action already selected for A, not yet stepped
+    pending_info_a: Any
+
+
+class AlternatingSampler:
+    """Same interface as SerialSampler; n_envs splits into two half-batches."""
+
+    def __init__(self, env_spec, agent, n_envs: int, horizon: int):
+        assert n_envs % 2 == 0
+        self.env = env_spec
+        self.agent = agent
+        self.n_envs = n_envs
+        self.horizon = horizon
+        self.half = SerialSampler(env_spec, agent, n_envs // 2, horizon)
+
+    def init(self, rng, agent_state_kwargs=None) -> AltState:
+        ka, kb, kp = jax.random.split(rng, 3)
+        sa = self.half.init(ka, agent_state_kwargs)
+        sb = self.half.init(kb, agent_state_kwargs)
+        return AltState(a=sa, b=sb, pending_a=None, pending_info_a=None)
+
+    def _select(self, params, s: SamplerState):
+        rng, k = jax.random.split(s.rng)
+        action, info, agent_state = self.agent.step(
+            params, k, s.obs, s.prev_action, s.prev_reward, s.agent_state)
+        return action, info, s._replace(rng=rng, agent_state=agent_state)
+
+    def _apply(self, s: SamplerState, action, info):
+        """Step envs with a previously selected action; record transition."""
+        B = s.obs.shape[0] if hasattr(s.obs, "shape") else \
+            jax.tree_util.tree_leaves(s.obs)[0].shape[0]
+        rng, k_env = jax.random.split(s.rng)
+        env_keys = jax.random.split(k_env, B)
+        env_state, obs2, reward, done, env_info = jax.vmap(self.env.step)(
+            s.env_state, action, env_keys)
+        d = done.astype(F32)
+        ep_return = s.ep_return + reward
+        ep_len = s.ep_len + 1
+        out = RolloutBatch(
+            observation=s.obs, prev_action=s.prev_action,
+            prev_reward=s.prev_reward, action=action, reward=reward, done=done,
+            timeout=env_info.timeout, next_observation=env_info.terminal_obs,
+            agent_info=info)
+        nd = 1.0 - d
+        prev_action = jax.tree_util.tree_map(
+            lambda a: (a * nd.astype(a.dtype).reshape(
+                (B,) + (1,) * (a.ndim - 1))).astype(a.dtype), action)
+        s2 = s._replace(
+            env_state=env_state, obs=obs2, prev_action=prev_action,
+            prev_reward=reward * nd, rng=rng,
+            ep_return=ep_return * nd, ep_len=ep_len * (1 - done.astype(jnp.int32)),
+            completed_return_sum=s.completed_return_sum + jnp.sum(d * ep_return),
+            completed_len_sum=s.completed_len_sum + jnp.sum(d * ep_len),
+            completed_count=s.completed_count + jnp.sum(done.astype(jnp.int32)))
+        return s2, out
+
+    def collect(self, params, state: AltState):
+        # prime A's first action if needed
+        if state.pending_a is None:
+            act_a, info_a, sa = self._select(params, state.a)
+            state = AltState(sa, state.b, act_a, info_a)
+
+        def body(carry, _):
+            st = carry
+            # phase 1: A steps envs (using pending action) || B selects action
+            act_b, info_b, sb = self._select(params, st.b)
+            sa, out_a = self._apply(st.a, st.pending_a, st.pending_info_a)
+            # phase 2: B steps envs || A selects its next action
+            act_a, info_a, sa = self._select(params, sa)
+            sb, out_b = self._apply(sb, act_b, info_b)
+            st2 = AltState(sa, sb, act_a, info_a)
+            # interleave half-batches back to full batch width
+            out = jax.tree_util.tree_map(
+                lambda xa, xb: jnp.concatenate([xa, xb], axis=0), out_a, out_b)
+            return st2, out
+
+        state2, batch = jax.lax.scan(body, state, None, length=self.horizon)
+        return state2, batch
+
+    def bootstrap_value(self, params, state: AltState):
+        va = self.agent.value(params, state.a.obs, state.a.prev_action,
+                              state.a.prev_reward, state.a.agent_state)
+        vb = self.agent.value(params, state.b.obs, state.b.prev_action,
+                              state.b.prev_reward, state.b.agent_state)
+        return jnp.concatenate([va, vb], axis=0)
+
+    @staticmethod
+    def traj_stats(state: AltState):
+        n = jnp.maximum(state.a.completed_count + state.b.completed_count, 1)
+        rs = state.a.completed_return_sum + state.b.completed_return_sum
+        ls = state.a.completed_len_sum + state.b.completed_len_sum
+        return {"avg_return": rs / n.astype(F32), "avg_len": ls / n.astype(F32),
+                "episodes": state.a.completed_count + state.b.completed_count}
+
+    @staticmethod
+    def full_agent_state(state: AltState):
+        """Interleaved [A-half, B-half] agent state matching batch layout."""
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0),
+            state.a.agent_state, state.b.agent_state)
+
+    @staticmethod
+    def reset_stats(state: AltState) -> AltState:
+        return AltState(SerialSampler.reset_stats(state.a),
+                        SerialSampler.reset_stats(state.b),
+                        state.pending_a, state.pending_info_a)

@@ -1,0 +1,132 @@
+"""Serial sampler (paper §2.1): agent + envs in one compiled program.
+
+``lax.scan`` over time x ``vmap`` over envs replaces the Python loop; since
+envs are pure JAX, the whole rollout jit-compiles and runs on-device — the
+TPU-native version of "keep action selection batched on the accelerator".
+
+Produces time-major (T, B) RolloutBatch with agent_info (logp/value or q),
+per-episode return tracking (TrajectoryInfo of §6.1) carried in the state.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.narrtup import namedarraytuple
+
+F32 = jnp.float32
+
+RolloutBatch = namedarraytuple(
+    "RolloutBatch",
+    ["observation", "prev_action", "prev_reward", "action", "reward", "done",
+     "timeout", "next_observation", "agent_info"])
+
+
+class SamplerState(NamedTuple):
+    env_state: Any
+    obs: Any
+    prev_action: Any
+    prev_reward: Any
+    agent_state: Any
+    rng: Any
+    # TrajectoryInfo accumulators
+    ep_return: Any
+    ep_len: Any
+    completed_return_sum: Any
+    completed_len_sum: Any
+    completed_count: Any
+
+
+class SerialSampler:
+    def __init__(self, env_spec, agent, n_envs: int, horizon: int):
+        self.env = env_spec
+        self.agent = agent
+        self.n_envs = n_envs
+        self.horizon = horizon
+
+    def init(self, rng, agent_state_kwargs=None) -> SamplerState:
+        k_env, k_rng = jax.random.split(rng)
+        env_state, obs = jax.vmap(self.env.reset)(
+            jax.random.split(k_env, self.n_envs))
+        null = jnp.asarray(self.env.action_space.null_value())
+        act0 = jnp.zeros((self.n_envs,) + null.shape, null.dtype)
+        agent_state = self.agent.initial_state(self.n_envs,
+                                               **(agent_state_kwargs or {}))
+        B = self.n_envs
+        return SamplerState(
+            env_state=env_state, obs=obs,
+            prev_action=act0, prev_reward=jnp.zeros((B,), F32),
+            agent_state=agent_state, rng=k_rng,
+            ep_return=jnp.zeros((B,), F32), ep_len=jnp.zeros((B,), jnp.int32),
+            completed_return_sum=jnp.zeros((), F32),
+            completed_len_sum=jnp.zeros((), F32),
+            completed_count=jnp.zeros((), jnp.int32),
+        )
+
+    def collect(self, params, state: SamplerState):
+        """One sampling batch: returns (state', RolloutBatch (T,B), bootstrap_value)."""
+        B = self.n_envs
+
+        def step_fn(carry, _):
+            s = carry
+            rng, k_act, k_env = jax.random.split(s.rng, 3)
+            action, info, agent_state = self.agent.step(
+                params, k_act, s.obs, s.prev_action, s.prev_reward, s.agent_state)
+            env_keys = jax.random.split(k_env, B)
+            env_state, obs2, reward, done, env_info = jax.vmap(self.env.step)(
+                s.env_state, action, env_keys)
+            # episode bookkeeping (TrajectoryInfo)
+            ep_return = s.ep_return + reward
+            ep_len = s.ep_len + 1
+            d = done.astype(F32)
+            completed_return_sum = s.completed_return_sum + jnp.sum(d * ep_return)
+            completed_len_sum = s.completed_len_sum + jnp.sum(d * ep_len)
+            completed_count = s.completed_count + jnp.sum(done.astype(jnp.int32))
+            ep_return = ep_return * (1.0 - d)
+            ep_len = (ep_len * (1 - done.astype(jnp.int32)))
+
+            out = RolloutBatch(
+                observation=s.obs, prev_action=s.prev_action,
+                prev_reward=s.prev_reward, action=action, reward=reward,
+                done=done, timeout=env_info.timeout,
+                next_observation=env_info.terminal_obs, agent_info=info)
+            # prev_action/reward reset to null at episode boundary (paper §6.3)
+            nd = (1.0 - d)
+            prev_action = jax.tree_util.tree_map(
+                lambda a: (a * nd.astype(a.dtype).reshape(
+                    (B,) + (1,) * (a.ndim - 1))).astype(a.dtype), action)
+            prev_reward = reward * nd
+            s2 = SamplerState(env_state, obs2, prev_action, prev_reward,
+                              agent_state, rng, ep_return, ep_len,
+                              completed_return_sum, completed_len_sum,
+                              completed_count)
+            return s2, out
+
+        state2, batch = jax.lax.scan(step_fn, state, None, length=self.horizon)
+        return state2, batch
+
+    def bootstrap_value(self, params, state: SamplerState):
+        return self.agent.value(params, state.obs, state.prev_action,
+                                state.prev_reward, state.agent_state)
+
+    @staticmethod
+    def traj_stats(state: SamplerState):
+        n = jnp.maximum(state.completed_count, 1)
+        return {"avg_return": state.completed_return_sum / n.astype(F32),
+                "avg_len": state.completed_len_sum / n.astype(F32),
+                "episodes": state.completed_count}
+
+    @staticmethod
+    def full_agent_state(state: SamplerState):
+        """Agent recurrent state at the CURRENT batch boundary, full width."""
+        return state.agent_state
+
+    @staticmethod
+    def reset_stats(state: SamplerState) -> SamplerState:
+        return state._replace(
+            completed_return_sum=jnp.zeros((), F32),
+            completed_len_sum=jnp.zeros((), F32),
+            completed_count=jnp.zeros((), jnp.int32))

@@ -1,0 +1,8 @@
+"""Training substrate: optimizers (paper §6.1 'Optimizer'), sharded
+checkpointing with elastic re-shard, and gradient compression."""
+from .optim import (
+    OptState, adam, sgd, constant, linear_warmup_cosine, clip_by_global_norm,
+    soft_update, Optimizer,
+)
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from .compress import ef_quantize, ef_dequantize, cross_pod_allreduce, EFState

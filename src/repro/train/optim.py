@@ -1,0 +1,142 @@
+"""Optimizers from scratch (no optax): Adam/AdamW + SGD, global-norm clip,
+LR schedules, Polyak target-network updates.
+
+Adam moments are fp32 trees with the SAME structure as params, so whatever
+PartitionSpec tree shards the params shards the optimizer state (ZeRO-1 comes
+from the fsdp axis in sharding rules, not from optimizer code).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> OptState
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, F32)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup: int, total: int,
+                         final_frac: float = 0.1):
+    def sched(step):
+        step = step.astype(F32)
+        warm = peak_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return sched
+
+
+# ---------------------------------------------------------------------------
+# gradient utilities
+# ---------------------------------------------------------------------------
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0, grad_clip: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, F32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+    def update(grads, state: OptState, params):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1 - b1 ** step.astype(F32)
+        bc2 = 1 - b2 ** step.astype(F32)
+
+        def upd(p, g, m, v):
+            g = g.astype(F32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / bc1
+            vhat = v / bc2
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(F32)
+            return (p.astype(F32) - lr_t * delta).astype(p.dtype), m, v
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, mu=mu, nu=nu), gnorm
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, momentum: float = 0.0, grad_clip: Optional[float] = None) -> Optimizer:
+    sched = lr if callable(lr) else constant(lr)
+
+    def init(params):
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, F32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update(grads, state: OptState, params):
+        if grad_clip is not None:
+            grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        else:
+            gnorm = global_norm(grads)
+        step = state.step + 1
+        lr_t = sched(step)
+
+        def upd(p, g, m):
+            m = momentum * m + g.astype(F32)
+            return (p.astype(F32) - lr_t * m).astype(p.dtype), m
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state.mu)
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, OptState(step=step, mu=mu, nu=None), gnorm
+
+    return Optimizer(init, update)
+
+
+def soft_update(target, online, tau: float):
+    """Polyak averaging for target networks (DDPG/TD3/SAC)."""
+    return jax.tree_util.tree_map(
+        lambda t, o: (1 - tau) * t.astype(F32) + tau * o.astype(F32), target, online)

@@ -1,0 +1,166 @@
+"""Learning-performance integration tests (paper §3 at CPU scale): each
+algorithm family demonstrably improves its environment within a tight
+compute budget.  Thresholds are loose — these guard against silent
+learning-breakage, not benchmark scores (benchmarks/ has the curves)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.envs import make_env
+from repro.agents import (make_categorical_pg_agent, make_dqn_agent,
+                          make_sac_agent)
+from repro.algos import PPO, A2C, DQN, SAC
+from repro.core.distributions import Categorical
+from repro.models.rl_models import (make_pg_mlp, make_q_conv, make_sac_actor,
+                                    make_q_critic)
+from repro.samplers import SerialSampler
+from repro.runners import OnPolicyRunner, OffPolicyRunner
+from repro.utils.logger import Logger
+
+
+class _Null:
+    def record(self, *a, **k):
+        pass
+
+
+@pytest.mark.slow
+def test_ppo_learns_cartpole(rng):
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    algo = PPO(model.apply, adam_lr(7e-4), distribution=Categorical(2),
+               epochs=4, minibatches=4, entropy_coeff=0.01)
+    sampler = SerialSampler(env, agent, n_envs=16, horizon=64)
+    runner = OnPolicyRunner(sampler, algo, n_iterations=60, log_interval=60,
+                            logger=_Null())
+    ts, ss, _ = runner.run(rng)
+    ret = _eval_return(sampler, ts.params, ss)
+    assert ret > 100, f"PPO cartpole return {ret}"
+
+
+@pytest.mark.slow
+def test_a2c_improves_cartpole(rng):
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    algo = A2C(model.apply, adam_lr(7e-4), distribution=Categorical(2),
+               gae_lambda=0.95, entropy_coeff=0.01)
+    sampler = SerialSampler(env, agent, n_envs=16, horizon=32)
+    runner = OnPolicyRunner(sampler, algo, n_iterations=80, log_interval=80,
+                            logger=_Null())
+    ts, ss, _ = runner.run(rng)
+    ret = _eval_return(sampler, ts.params, ss)
+    assert ret > 50, f"A2C cartpole return {ret}"
+
+
+@pytest.mark.slow
+def test_dqn_learns_catch(rng):
+    env = make_env("catch")
+    model = make_q_conv(1, 3, img_hw=(10, 5), channels=(16, 32),
+                        kernels=(3, 3), strides=(1, 1), d_out=128,
+                        dueling=True)
+    agent = make_dqn_agent(model, 3)
+    algo = DQN(model.apply, adam_lr(5e-4), gamma=0.99, double=True,
+               target_update_interval=100)
+    sampler = SerialSampler(env, agent, n_envs=16, horizon=16)
+    runner = OffPolicyRunner(sampler, algo, replay_capacity=8192,
+                             batch_size=64, n_iterations=200,
+                             updates_per_collect=4, min_replay=512,
+                             prioritized=True, log_interval=200,
+                             logger=_Null(),
+                             agent_state_kwargs={"epsilon": 0.2})
+    ts, ss, _ = runner.run(rng)
+    # evaluate greedily
+    ss = sampler.reset_stats(ss)
+    greedy = {"epsilon": jnp.zeros(16)}
+    ss = ss._replace(agent_state=greedy)
+    for _ in range(4):
+        ss, _ = jax.jit(sampler.collect)(ts.params, ss)
+    ret = float(sampler.traj_stats(ss)["avg_return"])
+    # random policy scores ~-0.6; >0 means the paddle tracks the ball
+    assert ret > 0.0, f"DQN catch return {ret}"
+
+
+@pytest.mark.slow
+def test_sac_improves_pendulum(rng):
+    env = make_env("pendulum")
+    actor = make_sac_actor(3, 1, hidden=(64, 64))
+    critic = make_q_critic(3, 1, hidden=(64, 64))
+    agent = make_sac_agent(actor, 1)
+    algo = SAC(actor.apply, critic.apply, adam_lr(1e-3), adam_lr(1e-3),
+               act_dim=1)
+    sampler = SerialSampler(env, agent, n_envs=8, horizon=32)
+    k1, _ = jax.random.split(rng)
+    params = {"actor": actor.init(k1), "critic": critic.init(k1)}
+    runner = OffPolicyRunner(sampler, algo, replay_capacity=16384,
+                             batch_size=128, n_iterations=80,
+                             updates_per_collect=4, min_replay=1024,
+                             log_interval=80, logger=_Null())
+    # baseline: random-ish initial policy return (pendulum episodes are 200
+    # steps, so collect enough for full episodes to complete)
+    ss0 = sampler.init(rng)
+    for _ in range(8):
+        ss0, _ = jax.jit(sampler.collect)(params, ss0)
+    before = float(sampler.traj_stats(ss0)["avg_return"])
+    assert before < -500  # sanity: untrained pendulum is bad
+    ts, ss, _ = runner.run(rng, params=params)
+    after = _eval_return(sampler, ts.params, ss)
+    assert after > before + 100, f"SAC pendulum {before} -> {after}"
+
+
+@pytest.mark.slow
+def test_lm_ppo_pipeline_exact_and_stable():
+    """The LM-policy pipeline (decode-as-action-selection + PPO).
+
+    The strong invariant: logp recorded on the SERVING path (decode_step
+    with the KV/SSM cache) must equal the logp the TRAINING path recomputes
+    (forward_train) — i.e. the PPO ratio at the first update is exactly 1.
+    This is what makes the paper's 'same model for sampling and
+    optimization' claim true at LM scale.
+
+    Learning signal at CPU budgets is marginal (a 256x256 conditional from
+    ~30k reward-only samples), so the reward assertion is only
+    non-degradation vs the uniform-policy floor (~-6.2 nats); the full
+    learning demonstration lives in the cartpole/catch/pendulum tests.
+    """
+    from repro.launch import train as lm_train
+    from repro.configs import get_smoke_config
+    from repro.envs.token_lm import make_token_lm
+    from repro.models import backbones as bb
+    cfg = get_smoke_config("mamba2-1.3b")
+    env = make_token_lm(vocab=cfg.vocab, episode_len=16)
+    roll = jax.jit(lm_train.make_lm_rollout(cfg, env, 16, 16))
+    p0 = bb.init_lm(jax.random.PRNGKey(0), cfg)
+    traj0, _ = roll(p0, jax.random.PRNGKey(123))
+
+    # serve-path logp == train-path logp (ratio == 1)
+    tokens = jnp.swapaxes(traj0["tokens"], 0, 1)
+    actions = jnp.swapaxes(traj0["actions"], 0, 1)
+    hidden, _ = bb.forward_train(p0, tokens, cfg)
+    logits = bb.lm_logits(p0, hidden, cfg).astype(jnp.float32)
+    logp_train = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), actions[..., None], -1)[..., 0]
+    logp_serve = jnp.swapaxes(traj0["logp"], 0, 1)
+    np.testing.assert_allclose(np.asarray(logp_train),
+                               np.asarray(logp_serve), atol=5e-2)
+
+    params = lm_train.main(["--arch", "mamba2-1.3b", "--steps", "60",
+                            "--batch", "16", "--horizon", "16",
+                            "--lr", "1e-3"])
+    traj, _ = roll(params, jax.random.PRNGKey(123))
+    r = float(jnp.mean(traj["reward"]))
+    assert np.isfinite(r)
+    assert r > -6.5, f"LM PPO degraded below uniform floor: {r}"
+
+
+def _eval_return(sampler, params, state, collects=8):
+    state = sampler.reset_stats(state)
+    for _ in range(collects):
+        state, _ = jax.jit(sampler.collect)(params, state)
+    return float(sampler.traj_stats(state)["avg_return"])
+
+
+def adam_lr(lr):
+    from repro.train.optim import adam
+    return adam(lr, grad_clip=1.0)

@@ -1,0 +1,105 @@
+"""namedarraytuple (paper §4) semantics: unit + hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.narrtup import (namedarraytuple, buffer_from_example,
+                                get_leading_dims, buffer_method,
+                                is_namedarraytuple)
+
+Pair = namedarraytuple("Pair", ["a", "b"])
+Nested = namedarraytuple("Nested", ["x", "pair"])
+
+
+def test_memoized_class():
+    assert namedarraytuple("Pair", ["a", "b"]) is Pair
+
+
+def test_indexed_write_syntax_matches_paper():
+    # dest[slice] = src works identically for bare arrays and structures
+    dest = Pair(a=np.zeros((10, 3)), b=np.zeros((10,)))
+    src = Pair(a=np.ones((2, 3)), b=np.ones((2,)))
+    dest[3:5] = src
+    assert dest.a[3:5].sum() == 6 and dest.b[3:5].sum() == 2
+    assert dest.a[:3].sum() == 0
+
+
+def test_none_placeholder_skipped():
+    dest = Pair(a=np.zeros((4,)), b=None)
+    dest[1] = Pair(a=np.float64(5), b=None)
+    assert dest.a[1] == 5
+
+
+def test_scalar_broadcast_write():
+    dest = Pair(a=np.zeros((4, 2)), b=np.zeros((4,)))
+    dest[2] = 7
+    assert dest.a[2].sum() == 14 and dest.b[2] == 7
+
+
+def test_nested_write_and_read():
+    dest = Nested(x=np.zeros((6,)), pair=Pair(a=np.zeros((6, 2)), b=None))
+    src = Nested(x=np.ones(()), pair=Pair(a=np.full((2,), 3.0), b=None))
+    dest[4] = src
+    out = dest[4]
+    assert out.x == 1 and (out.pair.a == 3).all() and out.pair.b is None
+
+
+def test_pytree_roundtrip_through_jit():
+    p = Pair(a=jnp.arange(4.0), b=jnp.ones((4, 2)))
+
+    @jax.jit
+    def f(t):
+        return jax.tree_util.tree_map(lambda x: x * 2, t)
+
+    out = f(p)
+    assert is_namedarraytuple(out)
+    assert (out.a == jnp.arange(4.0) * 2).all()
+
+
+def test_functional_at_set():
+    p = Pair(a=jnp.zeros((5,)), b=jnp.zeros((5, 2)))
+    q = p.at[2].set(Pair(a=1.0, b=jnp.ones((2,))))
+    assert q.a[2] == 1 and (q.b[2] == 1).all() and q.a[0] == 0
+
+
+def test_buffer_from_example_and_leading_dims():
+    ex = Pair(a=np.zeros((3,), np.float32), b=np.zeros((), np.int32))
+    buf = buffer_from_example(ex, (7, 2))
+    assert buf.a.shape == (7, 2, 3) and buf.b.shape == (7, 2)
+    assert get_leading_dims(buf, 2) == (7, 2)
+
+
+def test_mismatched_leading_dims_raises():
+    bad = Pair(a=np.zeros((3, 2)), b=np.zeros((4,)))
+    with pytest.raises(ValueError):
+        get_leading_dims(bad, 1)
+
+
+def test_buffer_method():
+    buf = Pair(a=np.zeros((2,), np.float32), b=None)
+    out = buffer_method(buf, "astype", np.int64)
+    assert out.a.dtype == np.int64 and out.b is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 19), st.integers(1, 5))
+def test_write_read_roundtrip_property(n, i, k):
+    """Writing any value at any valid index then reading returns it."""
+    i = i % n
+    dest = Pair(a=np.zeros((n, k)), b=np.zeros((n,)))
+    val = Pair(a=np.random.randn(k), b=np.random.randn())
+    dest[i] = val
+    out = dest[i]
+    np.testing.assert_allclose(out.a, val.a)
+    np.testing.assert_allclose(out.b, val.b)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=8))
+def test_fancy_index_property(idxs):
+    dest = Pair(a=np.arange(10.0), b=np.arange(10.0) * 2)
+    out = dest[np.asarray(idxs)]
+    np.testing.assert_allclose(out.a, np.asarray(idxs, float))
+    np.testing.assert_allclose(out.b, np.asarray(idxs, float) * 2)

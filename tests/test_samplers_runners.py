@@ -1,0 +1,179 @@
+"""Sampler/runner integration: rollout layout, alternating equivalence,
+checkpoint restart, sharded sampler + distributed pieces via subprocess."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.envs import make_env
+from repro.agents import make_categorical_pg_agent, make_dqn_agent
+from repro.models.rl_models import make_pg_mlp, make_q_mlp
+from repro.samplers import SerialSampler, AlternatingSampler
+from conftest import run_with_devices
+
+
+def _pg_sampler(n_envs=4, horizon=8, cls=SerialSampler):
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    return cls(env, agent, n_envs=n_envs, horizon=horizon), model
+
+
+def test_serial_rollout_layout(rng):
+    sampler, model = _pg_sampler()
+    params = model.init(rng)
+    state = sampler.init(rng)
+    state, batch = jax.jit(sampler.collect)(params, state)
+    assert batch.observation.shape == (8, 4, 4)
+    assert batch.reward.shape == (8, 4)
+    assert batch.agent_info["logp"].shape == (8, 4)
+    v = sampler.bootstrap_value(params, state)
+    assert v.shape == (4,)
+    # prev_reward at t+1 equals reward at t when not done
+    nd = ~np.asarray(batch.done[:-1])
+    np.testing.assert_allclose(
+        np.asarray(batch.prev_reward[1:])[nd],
+        np.asarray(batch.reward[:-1])[nd])
+
+
+def test_alternating_matches_serial_interface(rng):
+    sampler, model = _pg_sampler(n_envs=4, horizon=8, cls=AlternatingSampler)
+    params = model.init(rng)
+    state = sampler.init(rng)
+    state, batch = jax.jit(sampler.collect)(params, state)
+    assert batch.observation.shape == (8, 4, 4)
+    v = sampler.bootstrap_value(params, state)
+    assert v.shape == (4,)
+    stats = sampler.traj_stats(state)
+    assert "avg_return" in stats
+
+
+def test_traj_stats_accumulate(rng):
+    env = make_env("catch")
+    model = make_q_mlp(0, 3)  # unused trunk dims; obs is image -> use dqn mlp?
+    # catch obs is (10,5,1): flatten via a tiny conv-free agent is awkward;
+    # use random-action agent instead
+    from repro.agents import AgentDef
+    def step(params, k, obs, pa, pr, st):
+        return jax.random.randint(k, (obs.shape[0],), 0, 3), {}, st
+    agent = AgentDef(lambda k: {}, step, lambda *a: None, lambda b: None)
+    sampler = SerialSampler(env, agent, n_envs=4, horizon=30)
+    state = sampler.init(rng)
+    state, batch = jax.jit(sampler.collect)(params := {}, state)
+    stats = sampler.traj_stats(state)
+    # catch episodes last 9 steps -> ~3 episodes/env in 30 steps
+    assert int(stats["episodes"]) >= 8
+    assert float(stats["avg_len"]) == pytest.approx(9, abs=1)
+
+
+def test_checkpoint_roundtrip(tmp_path, rng):
+    from repro.train.checkpoint import save_checkpoint, restore_checkpoint, \
+        latest_step
+    tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(4),
+                                                      {"c": jnp.zeros(())}]}
+    save_checkpoint(str(tmp_path), 7, tree, extra={"iteration": 7})
+    assert latest_step(str(tmp_path)) == 7
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    out, manifest = restore_checkpoint(str(tmp_path), like)
+    np.testing.assert_allclose(out["a"], tree["a"])
+    assert manifest["extra"]["iteration"] == 7
+
+
+def test_checkpoint_elastic_reshard():
+    """Save on a 4-device mesh, restore onto 2- and 8-device meshes."""
+    run_with_devices("""
+import jax, numpy as np, jax.numpy as jnp, tempfile, os
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+d = tempfile.mkdtemp()
+mesh4 = jax.make_mesh((4,), ("data",))
+x = jax.device_put(jnp.arange(32.0).reshape(8, 4),
+                   NamedSharding(mesh4, P("data")))
+save_checkpoint(d, 1, {"x": x}, mesh_shape=(4,))
+for n in (2, 8):
+    mesh = jax.make_mesh((n,), ("data",))
+    sh = {"x": NamedSharding(mesh, P("data"))}
+    out, _ = restore_checkpoint(d, {"x": jnp.zeros((8, 4))}, shardings=sh)
+    assert len(out["x"].sharding.device_set) == n
+    np.testing.assert_allclose(np.asarray(out["x"]), np.asarray(x))
+print("elastic ok")
+""", n_devices=8)
+
+
+def test_sharded_sampler_multi_device():
+    """ShardedSampler under a real 4-way data mesh: same batch layout, env
+    shards stepped per device (the paper's parallel workers as SPMD)."""
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.envs import make_env
+from repro.agents import make_categorical_pg_agent
+from repro.models.rl_models import make_pg_mlp
+from repro.samplers.sharded import ShardedSampler
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+env = make_env("cartpole")
+model = make_pg_mlp(4, 2)
+agent = make_categorical_pg_agent(model)
+s = ShardedSampler(env, agent, n_envs=8, horizon=6, mesh=mesh)
+rng = jax.random.PRNGKey(0)
+params = model.init(rng)
+state = s.init(rng)
+state, batch = s.collect(params, state)
+assert batch.observation.shape == (6, 8, 4), batch.observation.shape
+assert not bool(jnp.isnan(batch.reward).any())
+state, batch = s.collect(params, state)  # second batch reuses state
+print("sharded ok", float(state.completed_count))
+""", n_devices=8)
+
+
+def test_ef_compression_cross_pod():
+    """int8 error-feedback all-reduce over a 'pod' axis: mean preserved to
+    quantization tolerance, residual carries the error."""
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.train.compress import cross_pod_allreduce, EFState
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+g = jnp.arange(8.0).reshape(2, 4) / 7.0
+
+def f(g_shard, res):
+    out, ef2 = cross_pod_allreduce({"w": g_shard},
+                                   EFState(residual={"w": res}), axis="pod")
+    return out["w"], ef2.residual["w"]
+
+fn = shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+               out_specs=(P("pod"), P("pod")), check_rep=False)
+out, res = fn(g, jnp.zeros((2, 4)))
+expect = np.mean(np.asarray(g), axis=0)  # mean across the 2 pods
+got = np.asarray(out)
+np.testing.assert_allclose(got[0], expect, atol=0.02)
+np.testing.assert_allclose(got[1], expect, atol=0.02)
+# error feedback: residual equals quantization error, bounded by scale/127
+assert np.abs(np.asarray(res)).max() <= (np.abs(np.asarray(g)).max() / 127 + 1e-6)
+print("ef ok")
+""", n_devices=8)
+
+
+def test_dryrun_machinery_small_mesh():
+    """The dry-run builders lower+compile on a small forced mesh and the HLO
+    collective parse finds nonzero bytes (end-to-end §Roofline plumbing)."""
+    run_with_devices("""
+import jax
+from repro.configs import get_smoke_config
+from repro.models.config import ShapeCell
+from repro.launch import mesh as mesh_lib
+from repro.launch.dryrun import build_train, build_decode, measure, _variant_cfg
+mesh = jax.make_mesh((2, 2), ("data", "model"))
+mesh_lib.install(mesh)
+cfg = get_smoke_config("glm4-9b")
+cell = ShapeCell("t", 32, 8, "train")
+m = measure(*build_train(_variant_cfg(cfg, 2), "glm4_9b", cell, mesh,
+                         n_micro=1, unroll_micro=True))
+assert m["flops"] > 0 and m["coll"] > 0, m
+cell2 = ShapeCell("d", 32, 8, "decode")
+m2 = measure(*build_decode(_variant_cfg(cfg, 2), "glm4_9b", cell2, mesh))
+assert m2["flops"] > 0, m2
+print("dryrun-small ok")
+""", n_devices=4)
