@@ -1,10 +1,15 @@
 """Learning-curve benches (paper Figs 4-6 at CPU scale): one short run per
 algorithm family; curves land in benchmarks/curves/*.csv, the CSV row
 reports final average return.  Budgets are deliberately small — these are
-the exercise-every-algorithm benches, not score chasing."""
+the exercise-every-algorithm benches, not score chasing.
+
+Also benches the TrainLoop dispatch modes: samples/sec with log_interval
+iterations fused into one lax.scan program vs. one jitted dispatch per
+iteration (``dispatch_fused_*`` / ``dispatch_periter_*`` rows)."""
 from __future__ import annotations
 
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -16,8 +21,10 @@ from repro.algos import PPO, A2C, DQN, SAC, TD3, DDPG
 from repro.core.distributions import Categorical
 from repro.models.rl_models import (make_pg_mlp, make_q_conv, make_sac_actor,
                                     make_ddpg_actor, make_q_critic)
+from repro.replay.interface import DeviceReplay, transition_example
 from repro.samplers import SerialSampler
-from repro.runners import OnPolicyRunner, OffPolicyRunner
+from repro.runners import OnPolicyRunner, OffPolicyRunner, TrainLoop
+from repro.runners.train_loop import split_keys
 from repro.train.optim import adam
 from repro.utils.logger import Logger
 
@@ -36,9 +43,66 @@ def _final_return(sampler, params, state):
     return float(sampler.traj_stats(state)["avg_return"])
 
 
+def _bench_dispatch(rows, *, window=20, reps=5):
+    """samples/sec: fused (one scan program per window) vs. per-iteration
+    dispatch — on-policy (A2C) and the full off-policy composite (DQN with
+    device replay).  Fused must not regress per-iteration dispatch."""
+    rng = jax.random.PRNGKey(0)
+
+    def time_loop(tag, loop, ts, ss, rs, steps_per_iter):
+        _, keys = split_keys(rng, window)
+        out = loop.run_window(ts, ss, rs, keys)   # compile
+        jax.block_until_ready(out[3].loss)
+        t0 = time.perf_counter()
+        ts2, ss2, rs2 = out[:3]
+        for _ in range(reps):
+            ts2, ss2, rs2, infos = loop.run_window(ts2, ss2, rs2, keys)
+        jax.block_until_ready(infos.loss)
+        dt = time.perf_counter() - t0
+        sps = steps_per_iter * window * reps / dt
+        rows.append({"name": f"dispatch_{tag}",
+                     "us_per_call": f"{dt / (window * reps) * 1e6:.1f}",
+                     "derived": f"sps_{sps:.0f}"})
+        return sps
+
+    # on-policy: A2C cartpole
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    algo = A2C(model.apply, adam(7e-4), distribution=Categorical(2))
+    sampler = SerialSampler(env, agent, n_envs=16, horizon=32)
+    params = model.init(rng)
+    for tag, fuse in (("fused_a2c", True), ("periter_a2c", False)):
+        loop = TrainLoop(sampler, algo, fuse=fuse)
+        time_loop(tag, loop, algo.init_train_state(rng, params),
+                  sampler.init(rng), None, 16 * 32)
+
+    # off-policy composite: DQN catch with device replay
+    env = make_env("catch")
+    qmodel = make_q_conv(1, 3, img_hw=(10, 5), channels=(16, 32),
+                         kernels=(3, 3), strides=(1, 1), d_out=128)
+    qagent = make_dqn_agent(qmodel, 3)
+    qalgo = DQN(qmodel.apply, adam(5e-4), double=True,
+                target_update_interval=100)
+    qsampler = SerialSampler(env, qagent, n_envs=16, horizon=16)
+    qparams = qmodel.init(rng)
+    replay = DeviceReplay(8192, prioritized=True)
+    for tag, fuse in (("fused_dqn", True), ("periter_dqn", False)):
+        loop = TrainLoop(qsampler, qalgo, replay=replay, batch_size=64,
+                         updates_per_collect=2, fuse=fuse)
+        rs = replay.init(transition_example(env))
+        ss = qsampler.init(rng, {"epsilon": 0.2})
+        # prefill so sampled batches are meaningful
+        for _ in range(4):
+            ss, rs = loop.collect_insert(qparams, ss, rs)
+        time_loop(tag, loop, qalgo.init_train_state(rng, qparams),
+                  ss, rs, 16 * 16)
+
+
 def run():
     rows = []
     rng = jax.random.PRNGKey(0)
+    _bench_dispatch(rows)
 
     # --- Fig 5 analogue: policy gradient on discrete control ---------------
     for name, algo_cls, kw in [

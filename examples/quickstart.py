@@ -1,6 +1,10 @@
 """Quickstart: PPO on CartPole in ~30 lines — the paper's serial-mode
 debugging workflow (§2.4: "serial mode will be easiest for debugging").
 
+The runner compiles each log window (collect -> update x log_interval) into
+ONE lax.scan program via the scan-fused TrainLoop; pass ``fuse=False`` to
+dispatch one program per iteration instead (see docs/architecture.md).
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax

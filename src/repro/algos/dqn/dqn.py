@@ -14,9 +14,14 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
 from ...train.optim import Optimizer
 
 F32 = jnp.float32
+
+#: the replayed-transition contract shared by DQN and the QPG family
+Q_TRANSITION_FIELDS = ("observation", "action", "return_", "bootstrap",
+                       "next_observation", "n_used", "is_weights")
 
 
 def huber(x, delta: float = 1.0):
@@ -25,6 +30,9 @@ def huber(x, delta: float = 1.0):
 
 
 class DQN:
+    batch_spec = BatchSpec("transition", Q_TRANSITION_FIELDS,
+                           priority_keys=("td_abs",))
+
     def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
                  gamma=0.99, n_step=1, double=True,
                  n_atoms: int = 0, v_min: float = -10.0, v_max: float = 10.0,

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
 from ...train.optim import Optimizer
 from .dqn import huber
 
@@ -34,6 +35,9 @@ def value_rescale_inv(x, eps=EPS_RESCALE):
 
 
 class R2D1:
+    batch_spec = BatchSpec("sequence", ("sequence", "init_state", "is_weights"),
+                           priority_keys=("td_abs_max", "td_abs_mean"))
+
     def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
                  gamma=0.997, n_step=5, burn_in=40,
                  target_update_interval=2500, eta=0.9, huber_delta=1.0,

@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
 from ...train.optim import Optimizer
 from .gae import gae_scan
 
@@ -18,6 +19,10 @@ F32 = jnp.float32
 
 
 class A2C:
+    batch_spec = BatchSpec("rollout", ("observation", "prev_action",
+                                       "prev_reward", "action", "reward",
+                                       "done", "bootstrap_value"))
+
     def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
                  distribution, gamma=0.99, gae_lambda=1.0,
                  value_coeff=0.5, entropy_coeff=0.01,

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
 from ...train.optim import Optimizer
 from .gae import gae_scan, gae_associative
 
@@ -21,6 +22,11 @@ F32 = jnp.float32
 
 
 class PPO:
+    batch_spec = BatchSpec("rollout", ("observation", "prev_action",
+                                       "prev_reward", "action", "reward",
+                                       "done", "value", "logp_old",
+                                       "bootstrap_value"))
+
     def __init__(self, apply_fn: Callable, optimizer: Optimizer, *,
                  distribution, gamma=0.99, gae_lambda=0.95,
                  clip_eps=0.2, value_coeff=0.5, entropy_coeff=0.01,

@@ -12,12 +12,17 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
+from ..dqn.dqn import Q_TRANSITION_FIELDS
 from ...train.optim import Optimizer, soft_update
 
 F32 = jnp.float32
 
 
 class DDPG:
+    batch_spec = BatchSpec("transition", Q_TRANSITION_FIELDS,
+                           priority_keys=("td_abs",))
+
     def __init__(self, actor_fn: Callable, critic_fn: Callable,
                  actor_opt: Optimizer, critic_opt: Optimizer, *,
                  gamma=0.99, tau=0.005):

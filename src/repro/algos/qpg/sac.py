@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
+from ...core.batch_spec import BatchSpec
+from ..dqn.dqn import Q_TRANSITION_FIELDS
 from ...core.distributions import SquashedGaussian
 from ...train.optim import Optimizer, adam, soft_update
 
@@ -16,6 +18,9 @@ F32 = jnp.float32
 
 
 class SAC:
+    batch_spec = BatchSpec("transition", Q_TRANSITION_FIELDS,
+                           priority_keys=("td_abs",))
+
     def __init__(self, actor_fn: Callable, critic_fn: Callable,
                  actor_opt: Optimizer, critic_opt: Optimizer, *,
                  act_dim: int, gamma=0.99, tau=0.005,

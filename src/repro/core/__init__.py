@@ -12,3 +12,5 @@ from .spaces import Box, Discrete, Composite
 from .distributions import Categorical, Gaussian, SquashedGaussian, EpsilonGreedy
 from .agent import Agent, AgentInputs, AgentStep, AlternatingAgentMixin
 from .algorithm import Algorithm, TrainState, OptInfo
+from .batch_spec import (BatchSpec, make_algo_batch, rollout_to_transitions,
+                         TRANSITION_FIELDS)

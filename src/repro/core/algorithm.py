@@ -6,8 +6,9 @@ the whole thing moves through pjit with explicit shardings.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Optional
 
+from .batch_spec import BatchSpec
 from .narrtup import namedarraytuple
 
 OptInfo = namedarraytuple("OptInfo", ["loss", "grad_norm", "extra"])
@@ -22,10 +23,16 @@ class TrainState(NamedTuple):
 
 class Algorithm:
     """Subclasses define:
+    batch_spec: BatchSpec — the fields ``update`` consumes and how they are
+        produced (on-policy rollout vs. replayed transition/sequence); the
+        runner stack feeds every algorithm through
+        ``make_algo_batch(algo.batch_spec, ...)``
     init_train_state(rng, params) -> TrainState
     loss(params, batch, rng, extra) -> (scalar, aux)
     update(train_state, batch, rng) -> (train_state, OptInfo)
     """
+
+    batch_spec: Optional[BatchSpec] = None
 
     def init_train_state(self, rng, params) -> TrainState:
         raise NotImplementedError

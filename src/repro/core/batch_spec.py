@@ -1,0 +1,131 @@
+"""Declarative batch contract between algorithms and the runner stack.
+
+The paper's thesis is that deep Q-learning, policy gradients, and Q-value
+policy gradients share one optimized infrastructure.  BatchSpec makes that
+sharing explicit: each algorithm *declares* what it consumes — which fields,
+whether it is on-policy or replayed, transition- or sequence-mode — and the
+single ``make_algo_batch`` adapter assembles exactly those fields from
+whatever the sampler/replay produced.  Runners never hand-build algorithm
+batches; they pass raw rollouts or replay samples through the adapter, so a
+new algorithm family or replay backend plugs in without touching runner
+internals.
+
+Modes
+-----
+- ``rollout``:    on-policy; the adapter reads the (T, B) RolloutBatch the
+                  sampler emitted (A2C, PPO).
+- ``transition``: replayed flat transitions; fields like ``return_`` /
+                  ``bootstrap`` / ``n_used`` are passed through when the
+                  backend precomputed them (host n-step extraction) or
+                  derived from the raw 1-step fields (device ring) —
+                  DQN, DDPG, TD3, SAC.
+- ``sequence``:   replayed fixed-length sequences with stored initial
+                  recurrent state (R2D1).
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+ROLLOUT = "rollout"
+TRANSITION = "transition"
+SEQUENCE = "sequence"
+
+#: transition keys every replay backend stores for the device/1-step path
+TRANSITION_FIELDS = ("observation", "action", "reward", "done", "timeout",
+                     "next_observation")
+
+# rollout-mode fields that live inside RolloutBatch.agent_info, keyed by the
+# name the algorithm consumes -> the name the agent recorded
+_AGENT_INFO_FIELDS = {"value": "value", "logp_old": "logp"}
+
+
+class BatchSpec(NamedTuple):
+    """What an algorithm's ``update`` consumes.
+
+    mode:          "rollout" | "transition" | "sequence"
+    fields:        exact batch keys ``algo.update`` reads — the adapter
+                   produces these and nothing else
+    priority_keys: ``OptInfo.extra`` keys that feed replay priority updates,
+                   in the order ``ReplayLike.update_priorities`` expects them
+    """
+    mode: str
+    fields: Tuple[str, ...]
+    priority_keys: Tuple[str, ...] = ()
+
+    @property
+    def on_policy(self) -> bool:
+        return self.mode == ROLLOUT
+
+    @property
+    def replayed(self) -> bool:
+        return not self.on_policy
+
+
+def rollout_to_transitions(batch) -> dict:
+    """Flatten a time-major (T, B) RolloutBatch into (T*B,) slot-major
+    transition dict — the single conversion every transition-replay insert
+    path (fused iteration, warmup, async host copy) goes through."""
+    flat = lambda x: x.reshape((-1,) + x.shape[2:])
+    return {name: flat(getattr(batch, name)) for name in TRANSITION_FIELDS}
+
+
+def _derive_transition_field(name: str, data: Mapping[str, Any]):
+    """Fields the 1-step device ring does not store but the algorithms
+    consume; the host buffers precompute these during n-step extraction."""
+    if name == "return_":
+        return data["reward"]
+    if name == "bootstrap":
+        done = data["done"].astype(F32)
+        timeout = data["timeout"].astype(F32)
+        return (1.0 - done) + done * timeout
+    if name == "n_used":
+        return jnp.ones_like(data["reward"], jnp.int32)
+    if name == "is_weights":
+        return jnp.ones_like(data["reward"], F32)
+    raise KeyError(name)
+
+
+def make_algo_batch(spec: BatchSpec, data, extras: Optional[Mapping] = None):
+    """Assemble the algorithm batch declared by ``spec``.
+
+    data:   the raw producer output — a RolloutBatch (rollout mode) or a
+            replay-sample mapping (transition/sequence mode).
+    extras: runner-supplied values outside the sample itself
+            (``bootstrap_value`` for on-policy, ``is_weights`` for replayed).
+
+    Returns a dict whose keys are exactly ``spec.fields``.
+    """
+    extras = extras or {}
+    out = {}
+    if spec.mode == ROLLOUT:
+        for name in spec.fields:
+            if name in extras:
+                out[name] = extras[name]
+            elif name in _AGENT_INFO_FIELDS:
+                out[name] = data.agent_info[_AGENT_INFO_FIELDS[name]]
+            elif hasattr(data, name):
+                out[name] = getattr(data, name)
+            else:
+                raise KeyError(
+                    f"rollout field {name!r} not found on {type(data).__name__}"
+                    f" or in extras {sorted(extras)}")
+        return out
+    if spec.mode in (TRANSITION, SEQUENCE):
+        for name in spec.fields:
+            if name in extras:
+                out[name] = extras[name]
+            elif name in data:
+                out[name] = data[name]
+            elif spec.mode == TRANSITION:
+                out[name] = _derive_transition_field(name, data)
+            else:
+                raise KeyError(
+                    f"sequence field {name!r} missing from sample keys "
+                    f"{sorted(data)} and extras {sorted(extras)}")
+        return out
+    raise ValueError(f"unknown BatchSpec mode {spec.mode!r}")

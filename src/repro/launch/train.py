@@ -83,6 +83,10 @@ def main(argv=None):
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-interval", type=int, default=0)
     ap.add_argument("--restore", action="store_true")
+    ap.add_argument("--fuse-window", type=int, default=1,
+                    help="compile this many (rollout + update) steps into ONE "
+                         "lax.scan program (the runners' TrainLoop fusion); "
+                         "logs/checkpoints land on window boundaries")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -114,6 +118,53 @@ def main(argv=None):
         return {"tokens": tm(traj["tokens"]), "actions": tm(traj["actions"]),
                 "logp_old": tm(traj["logp"]), "advantage": tm(adv),
                 "return_": tm(ret)}
+
+    if args.fuse_window > 1:
+        # the TrainLoop fusion at LM scale: rollout (serving path) + GAE +
+        # PPO update scanned over the window — one device program, metrics
+        # stacked and read back only at window boundaries.  The jitted
+        # rollout/train_step above inline into the outer jit, so both
+        # dispatch modes run the exact same per-step program.
+        from ..runners.train_loop import split_keys
+
+        @jax.jit
+        def fused_window(params, opt_state, ks):
+            def body(carry, k):
+                p, o = carry
+                traj, v_last = rollout(p, k)
+                batch = build_batch(traj, v_last)
+                p, o, metrics = train_step(p, o, batch)
+                metrics = dict(metrics,
+                               avg_reward=jnp.mean(traj["reward"]))
+                return (p, o), metrics
+            (params, opt_state), ms = jax.lax.scan(
+                body, (params, opt_state), ks)
+            return params, opt_state, jax.tree_util.tree_map(
+                lambda x: x[-1], ms)
+
+        t0 = time.time()
+        step = start
+        while step < args.steps:
+            chunk = min(args.fuse_window, args.steps - step)
+            if args.ckpt_dir and args.ckpt_interval:
+                nxt = step + args.ckpt_interval - (step % args.ckpt_interval)
+                chunk = min(chunk, nxt - step)
+            rng, ks = split_keys(rng, chunk)
+            params, opt_state, metrics = fused_window(params, opt_state, ks)
+            step += chunk
+            sps = args.batch * args.horizon * chunk / max(
+                time.time() - t0, 1e-9)
+            t0 = time.time()
+            logger.record(step, {
+                "avg_reward": float(metrics["avg_reward"]),
+                "loss": float(metrics["loss"]),
+                "entropy": float(metrics["entropy"]),
+                "samples_per_sec": sps,
+            })
+            if args.ckpt_dir and args.ckpt_interval and \
+                    step % args.ckpt_interval == 0:
+                save_checkpoint(args.ckpt_dir, step, (params, opt_state))
+        return params
 
     t0 = time.time()
     for step in range(start, args.steps):

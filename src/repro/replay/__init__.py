@@ -17,3 +17,5 @@ from .host import (
     FrameReplayBuffer,
 )
 from . import device
+from .interface import (ReplayLike, DeviceReplay, HostTransitionReplay,
+                        HostSequenceReplay, transition_example)

@@ -1,0 +1,176 @@
+"""One replay interface over both substrates (init/insert/sample/
+update_priorities) so runners are replay-backend-agnostic.
+
+Backends:
+- ``DeviceReplay``        — pure-functional jnp ring (replay/device.py);
+  every method is jit-safe, so the whole collect->insert->sample->update
+  composite fuses into one compiled program (the TrainLoop path).
+- ``HostTransitionReplay`` — numpy n-step buffers (replay/host.py); the
+  paper's shared-memory buffer for the asynchronous runner.  State is the
+  buffer object itself, mutated in place and returned for signature parity.
+- ``HostSequenceReplay``   — numpy sequence buffer with periodic stored
+  recurrent state (R2D1).
+
+All backends speak RolloutBatch on insert — each converts to its own
+storage layout — and return ``(sample, indices, is_weights)`` from
+``sample``, so the runner's only other contact with replay data is
+``make_algo_batch(algo.batch_spec, sample, ...)``.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core.batch_spec import rollout_to_transitions
+from . import device as dreplay
+from .host import (TransitionSamples, SequenceSamples,
+                   PrioritizedReplayBuffer)
+
+F32 = jnp.float32
+
+
+def host_tree(x):
+    """Device -> host copy of a pytree (the async memory-copier role)."""
+    return jax.tree_util.tree_map(lambda l: np.asarray(jax.device_get(l)), x)
+
+
+def transition_example(env) -> dict:
+    """Single-transition pytree (no batch dim) describing what one slot of a
+    transition replay stores for ``env`` — the init-time example."""
+    obs = jnp.asarray(env.observation_space.null_value())
+    act = jnp.asarray(env.action_space.null_value())
+    return {
+        "observation": obs,
+        "action": act,
+        "reward": jnp.zeros((), F32),
+        "done": jnp.zeros((), bool),
+        "timeout": jnp.zeros((), bool),
+        "next_observation": obs,
+    }
+
+
+class ReplayLike:
+    """The contract runners program against.
+
+    init(example) -> state
+    insert(state, rollout, **extras) -> state
+    sample(state, rng, batch_size) -> (sample, indices, is_weights)
+    update_priorities(state, indices, *priorities) -> state
+
+    ``device_resident`` says whether the methods are pure jnp functions
+    (usable inside jit/scan) or host-side mutators.
+    """
+
+    device_resident: bool = False
+
+    def init(self, example) -> Any:
+        raise NotImplementedError
+
+    def insert(self, state, rollout, **extras):
+        raise NotImplementedError
+
+    def sample(self, state, rng, batch_size: int):
+        raise NotImplementedError
+
+    def update_priorities(self, state, indices, *priorities):
+        raise NotImplementedError
+
+
+class DeviceReplay(ReplayLike):
+    """Functional jnp ring + sum tree; jit-safe throughout."""
+
+    device_resident = True
+
+    def __init__(self, capacity: int, *, prioritized: bool = False,
+                 alpha: float = 0.6, beta: float = 0.4):
+        self.capacity = capacity
+        self.prioritized = prioritized
+        self.alpha, self.beta = alpha, beta
+
+    def init(self, example) -> dreplay.ReplayState:
+        return dreplay.init_replay(example, self.capacity)
+
+    def insert(self, state, rollout, **extras):
+        return dreplay.insert(state, rollout_to_transitions(rollout))
+
+    def sample(self, state, rng, batch_size: int):
+        return dreplay.sample(state, rng, batch_size,
+                              uniform=not self.prioritized, beta=self.beta)
+
+    def update_priorities(self, state, indices, *priorities):
+        if not self.prioritized:
+            return state
+        (td_abs,) = priorities
+        return dreplay.update_priorities(state, indices, td_abs,
+                                         alpha=self.alpha)
+
+
+class HostTransitionReplay(ReplayLike):
+    """Wraps Uniform/Prioritized/Frame host buffers; ``state`` is the buffer."""
+
+    device_resident = False
+
+    def __init__(self, buffer):
+        self.buffer = buffer
+
+    def init(self, example=None):
+        return self.buffer
+
+    def insert(self, state, rollout, **extras):
+        b = host_tree(rollout)
+        samples = TransitionSamples(
+            observation=b.observation, action=b.action, reward=b.reward,
+            done=b.done, timeout=b.timeout)
+        state.append_samples(samples, next_obs=b.next_observation
+                             if state.store_next_obs else None)
+        return state
+
+    def sample(self, state, rng, batch_size: int):
+        hb = state.sample_batch(batch_size, rng)
+        indices = hb.pop("indices")
+        weights = hb.pop("is_weights")
+        return hb, indices, weights
+
+    def update_priorities(self, state, indices, *priorities):
+        if isinstance(state, PrioritizedReplayBuffer):
+            (td_abs,) = priorities
+            state.update_priorities(indices, np.asarray(jax.device_get(td_abs)))
+        return state
+
+
+class HostSequenceReplay(ReplayLike):
+    """Wraps SequenceReplayBuffer; insert takes the block-start recurrent
+    state via ``init_state=`` (periodic storage, paper §6.3)."""
+
+    device_resident = False
+
+    def __init__(self, buffer):
+        self.buffer = buffer
+
+    def init(self, example=None):
+        return self.buffer
+
+    def insert(self, state, rollout, *, init_state=None, **extras):
+        b = host_tree(rollout)
+        samples = SequenceSamples(
+            observation=b.observation, prev_action=b.prev_action,
+            prev_reward=b.prev_reward, action=b.action, reward=b.reward,
+            done=b.done, init_state=host_tree(init_state))
+        state.append_samples(samples)
+        return state
+
+    def sample(self, state, rng, batch_size: int):
+        hb = state.sample_batch(batch_size, rng)
+        indices = hb.pop("indices")
+        weights = hb.pop("is_weights")
+        return hb, indices, weights
+
+    def update_priorities(self, state, indices, *priorities):
+        td_max, td_mean = priorities
+        state.update_priorities(indices,
+                                np.asarray(jax.device_get(td_max)),
+                                np.asarray(jax.device_get(td_mean)))
+        return state

@@ -1,4 +1,7 @@
 """Runners (paper §6.1): connect sampler + agent + algorithm, manage the
-training loop, diagnostics, and checkpoints."""
+training loop, diagnostics, and checkpoints.  The synchronous runners are
+thin shells over the scan-fused TrainLoop; batches reach every algorithm
+through its declarative BatchSpec."""
+from .train_loop import TrainLoop
 from .minibatch import OnPolicyRunner, OffPolicyRunner
 from .async_rl import AsyncRunner, AsyncR2D1Runner

@@ -3,11 +3,15 @@
 rlpyt runs sampler and optimizer in separate processes around a shared-memory
 replay buffer with a double buffer + memory-copier + read/write lock.  Here
 the sampler's compiled rollout and the optimizer's compiled update are
-independent device programs; the HOST numpy replay buffer (replay/host.py)
-plays the shared-memory buffer, and JAX's async dispatch gives the overlap:
-while the device executes collect/update, the host thread copies the
-previous batch into the ring (the memory-copier role) — no locks needed in a
-single-controller process.
+independent device programs; a host ``ReplayLike`` backend
+(replay/interface.py wrapping replay/host.py) plays the shared-memory buffer,
+and JAX's async dispatch gives the overlap: while the device executes
+collect/update, the host thread copies the previous batch into the ring (the
+memory-copier role) — no locks needed in a single-controller process.
+
+The runner is replay-backend- and algorithm-agnostic: batches reach the
+algorithm through its declarative BatchSpec (``make_algo_batch``), identical
+to the synchronous TrainLoop path.
 
 The paper's control knobs are kept exactly:
 - ``replay_ratio``: consumption/generation rate; the optimizer throttles when
@@ -26,17 +30,17 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from ..replay.host import (TransitionSamples, SequenceSamples,
-                           UniformReplayBuffer, PrioritizedReplayBuffer,
-                           SequenceReplayBuffer)
+from ..core.batch_spec import make_algo_batch
+from ..replay.host import SequenceReplayBuffer
+from ..replay.interface import (HostSequenceReplay, HostTransitionReplay)
 from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from ..utils.logger import Logger
 
 F32 = jnp.float32
 
 
-def _host(x):
-    return jax.tree_util.tree_map(lambda l: np.asarray(jax.device_get(l)), x)
+def _device_tree(x):
+    return jax.tree_util.tree_map(jnp.asarray, x)
 
 
 class AsyncRunner:
@@ -49,6 +53,7 @@ class AsyncRunner:
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
                  agent_state_kwargs: Optional[dict] = None):
         self.sampler, self.algo, self.buffer = sampler, algo, buffer
+        self.replay = self._make_replay(buffer)
         self.batch_size = batch_size
         self.replay_ratio = replay_ratio
         self.min_replay = min_replay
@@ -61,26 +66,22 @@ class AsyncRunner:
         self._update = jax.jit(self.algo.update)
         self._rng_np = np.random.default_rng(0)
 
-    # -- host-side plumbing -------------------------------------------------
-    def _append(self, batch):
-        b = _host(batch)
-        samples = TransitionSamples(
-            observation=b.observation, action=b.action, reward=b.reward,
-            done=b.done, timeout=b.timeout)
-        self.buffer.append_samples(samples, next_obs=b.next_observation
-                                   if self.buffer.store_next_obs else None)
+    @staticmethod
+    def _make_replay(buffer):
+        return HostTransitionReplay(buffer)
 
-    def _device_batch(self, hb):
-        batch = {
-            "observation": jnp.asarray(hb["observation"]),
-            "action": jnp.asarray(hb["action"]),
-            "return_": jnp.asarray(hb["return_"]),
-            "bootstrap": jnp.asarray(hb["bootstrap"]),
-            "next_observation": jnp.asarray(hb["next_observation"]),
-            "n_used": jnp.asarray(hb["n_used"]),
-            "is_weights": jnp.asarray(hb["is_weights"]),
-        }
-        return batch, hb["indices"]
+    def _optimize(self, train_state, replay_state, rng):
+        """One throttled optimizer turn: sample -> BatchSpec adapter ->
+        update -> priority feedback.  Shared by both replay modes."""
+        spec = self.algo.batch_spec
+        hb, idx, w = self.replay.sample(replay_state, self._rng_np,
+                                        self.batch_size)
+        batch = make_algo_batch(spec, _device_tree(hb),
+                                {"is_weights": jnp.asarray(w)})
+        train_state, info = self._update(train_state, batch, rng)
+        self.replay.update_priorities(
+            replay_state, idx, *(info.extra[k] for k in spec.priority_keys))
+        return train_state, info
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
@@ -88,6 +89,7 @@ class AsyncRunner:
             params = self.sampler.agent.init_params(k1)
         train_state = self.algo.init_train_state(k2, params)
         sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+        replay_state = self.replay.init()
         start_iter = 0
         if restore and self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
             train_state, manifest = restore_checkpoint(self.ckpt_dir, train_state)
@@ -101,22 +103,17 @@ class AsyncRunner:
             rng, _ = jax.random.split(rng)
             # sampler turn (actor uses CURRENT params — refresh per batch)
             sampler_state, batch = self._collect(train_state.params, sampler_state)
-            self._append(batch)
+            replay_state = self.replay.insert(replay_state, batch)
             generated += steps_per_iter
 
             # optimizer turn: throttle to replay_ratio
             while (len(self.buffer) >= self.min_replay and
                    (consumed + self.batch_size) / max(generated, 1)
                    <= self.replay_ratio):
-                hb = self.buffer.sample_batch(self.batch_size, self._rng_np)
-                dbatch, idx = self._device_batch(hb)
                 rng, k = jax.random.split(rng)
-                train_state, info = self._update(train_state, dbatch, k)
+                train_state, info = self._optimize(train_state, replay_state, k)
                 last_info = info
                 consumed += self.batch_size
-                if isinstance(self.buffer, PrioritizedReplayBuffer):
-                    self.buffer.update_priorities(
-                        idx, np.asarray(jax.device_get(info.extra["td_abs"])))
 
             if (it + 1) % self.log_interval == 0 and last_info is not None:
                 stats = self.sampler.traj_stats(sampler_state)
@@ -153,14 +150,9 @@ class AsyncR2D1Runner(AsyncRunner):
         assert sampler.horizon == buffer.state_interval, (
             "horizon must equal state_interval for stored-state alignment")
 
-    def _append_seq(self, batch, init_state):
-        b = _host(batch)
-        st = _host(init_state)
-        samples = SequenceSamples(
-            observation=b.observation, prev_action=b.prev_action,
-            prev_reward=b.prev_reward, action=b.action, reward=b.reward,
-            done=b.done, init_state=st)
-        self.buffer.append_samples(samples)
+    @staticmethod
+    def _make_replay(buffer):
+        return HostSequenceReplay(buffer)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
@@ -168,6 +160,7 @@ class AsyncR2D1Runner(AsyncRunner):
             params = self.sampler.agent.init_params(k1)
         train_state = self.algo.init_train_state(k2, params)
         sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+        replay_state = self.replay.init()
 
         generated, consumed = 0, 0
         steps_per_iter = self.sampler.horizon * self.sampler.n_envs
@@ -177,28 +170,18 @@ class AsyncR2D1Runner(AsyncRunner):
             # recurrent state at block start -> stored with the block
             init_state = self.sampler.full_agent_state(sampler_state)["lstm"]
             sampler_state, batch = self._collect(train_state.params, sampler_state)
-            self._append_seq(batch, init_state)
+            replay_state = self.replay.insert(replay_state, batch,
+                                              init_state=init_state)
             generated += steps_per_iter
 
             while (self.buffer.tree.total > 0 and
                    len_filled(self.buffer) >= self.min_replay and
                    (consumed + self.batch_size * self.buffer.seq_len)
                    / max(generated, 1) <= self.replay_ratio):
-                hb = self.buffer.sample_batch(self.batch_size, self._rng_np)
-                dbatch = {
-                    "sequence": jax.tree_util.tree_map(jnp.asarray, hb["sequence"]),
-                    "init_state": jax.tree_util.tree_map(jnp.asarray,
-                                                         hb["init_state"]),
-                    "is_weights": jnp.asarray(hb["is_weights"]),
-                }
                 rng, k = jax.random.split(rng)
-                train_state, info = self._update(train_state, dbatch, k)
+                train_state, info = self._optimize(train_state, replay_state, k)
                 last_info = info
                 consumed += self.batch_size * self.buffer.seq_len
-                self.buffer.update_priorities(
-                    hb["indices"],
-                    np.asarray(jax.device_get(info.extra["td_abs_max"])),
-                    np.asarray(jax.device_get(info.extra["td_abs_mean"])))
 
             if (it + 1) % self.log_interval == 0 and last_info is not None:
                 stats = self.sampler.traj_stats(sampler_state)

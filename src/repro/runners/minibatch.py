@@ -1,29 +1,23 @@
-"""Synchronous runners (paper §2.2 arrangement, Fig. 2).
+"""Synchronous runners (paper §2.2 arrangement, Fig. 2) — thin shells over
+the scan-fused TrainLoop.
 
-OnPolicyRunner: collect -> update, fully fused — the (collect + algo.update)
-pair jit-compiles into ONE program per iteration, the TPU equivalent of the
-paper's "whole sampling-training stack replicated per process" with the
-all-reduce inserted by SPMD instead of NCCL hooks.
-
-OffPolicyRunner: collect -> insert into DEVICE replay -> k updates, also one
-program; the replay ratio is the exact k = updates-per-collect knob the
-asynchronous runner throttles dynamically (paper §2.3).
+OnPolicyRunner: collect -> update.  OffPolicyRunner: collect -> insert into a
+ReplayLike backend -> k updates (the paper's replay-ratio knob).  Both feed
+the algorithm through its declarative BatchSpec, so no runner builds an
+algorithm batch by hand, and both compile ``log_interval`` iterations into
+ONE device program via TrainLoop (``fuse=False`` restores per-iteration
+dispatch for benchmarking).
 """
 from __future__ import annotations
 
-import time
-from functools import partial
-from typing import Any, Callable, Optional
+from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from ..core.algorithm import TrainState
-from ..replay import device as dreplay
-from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from ..replay.interface import DeviceReplay, ReplayLike, transition_example
+from ..train.checkpoint import restore_checkpoint, latest_step
 from ..utils.logger import Logger
-
-F32 = jnp.float32
+from .train_loop import TrainLoop
 
 
 class OnPolicyRunner:
@@ -31,34 +25,14 @@ class OnPolicyRunner:
 
     def __init__(self, sampler, algo, *, n_iterations: int,
                  log_interval: int = 10, logger: Optional[Logger] = None,
-                 ckpt_dir: Optional[str] = None, ckpt_interval: int = 0):
+                 ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
+                 fuse: bool = True):
         self.sampler, self.algo = sampler, algo
         self.n_iterations = n_iterations
         self.log_interval = log_interval
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
-
-        @jax.jit
-        def iteration(train_state, sampler_state, rng):
-            sampler_state, batch = self.sampler.collect(train_state.params,
-                                                        sampler_state)
-            bootstrap = self.sampler.bootstrap_value(train_state.params,
-                                                     sampler_state)
-            algo_batch = {
-                "observation": batch.observation,
-                "prev_action": batch.prev_action,
-                "prev_reward": batch.prev_reward,
-                "action": batch.action,
-                "reward": batch.reward,
-                "done": batch.done,
-                "value": batch.agent_info["value"],
-                "logp_old": batch.agent_info["logp"],
-                "bootstrap_value": bootstrap,
-            }
-            train_state, info = self.algo.update(train_state, algo_batch, rng)
-            return train_state, sampler_state, info
-
-        self._iteration = iteration
+        self.loop = TrainLoop(sampler, algo, fuse=fuse)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
@@ -70,167 +44,72 @@ class OnPolicyRunner:
             train_state, manifest = restore_checkpoint(self.ckpt_dir, train_state)
             start_iter = manifest["extra"].get("iteration", 0)
         sampler_state = self.sampler.init(k3)
-        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
-        t0 = time.time()
-        last_info = None
-        for it in range(start_iter, self.n_iterations):
-            rng, k = jax.random.split(rng)
-            train_state, sampler_state, info = self._iteration(
-                train_state, sampler_state, k)
-            last_info = info
-            if (it + 1) % self.log_interval == 0:
-                stats = self.sampler.traj_stats(sampler_state)
-                sampler_state = self.sampler.reset_stats(sampler_state)
-                sps = steps_per_iter * self.log_interval / max(
-                    time.time() - t0, 1e-9)
-                t0 = time.time()
-                self.logger.record((it + 1) * steps_per_iter, {
-                    "iter": it + 1,
-                    "loss": info.loss, "grad_norm": info.grad_norm,
-                    "samples_per_sec": sps, **stats,
-                    **{k: v for k, v in info.extra.items()},
-                })
-            if self.ckpt_dir and self.ckpt_interval and \
-                    (it + 1) % self.ckpt_interval == 0:
-                save_checkpoint(self.ckpt_dir, it + 1, train_state,
-                                extra={"iteration": it + 1})
+        train_state, sampler_state, _, last_info = self.loop.drive(
+            rng, train_state, sampler_state, None,
+            n_iterations=self.n_iterations, log_interval=self.log_interval,
+            logger=self.logger, start_iter=start_iter,
+            ckpt_dir=self.ckpt_dir, ckpt_interval=self.ckpt_interval)
         return train_state, sampler_state, last_info
 
 
 class OffPolicyRunner:
-    """DQN/DDPG/TD3/SAC with the device-resident functional replay: the
-    (collect + insert + sample + update^k) composite is ONE jitted program."""
+    """DQN/DDPG/TD3/SAC over a device-resident ReplayLike: the
+    (collect + insert + sample + update^k) composite is one program, and the
+    whole log window is one scan over iterations."""
 
     def __init__(self, sampler, algo, *, replay_capacity: int,
                  batch_size: int, n_iterations: int, updates_per_collect: int = 1,
                  min_replay: int = 1000, prioritized: bool = False,
-                 beta: float = 0.4, use_next_obs_field: bool = True,
+                 beta: float = 0.4,
                  log_interval: int = 10, logger: Optional[Logger] = None,
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
-                 agent_state_kwargs: Optional[dict] = None):
+                 agent_state_kwargs: Optional[dict] = None,
+                 replay: Optional[ReplayLike] = None, fuse: bool = True):
         self.sampler, self.algo = sampler, algo
-        self.batch_size = batch_size
         self.n_iterations = n_iterations
-        self.k = updates_per_collect
         self.min_replay = min_replay
-        self.prioritized = prioritized
-        self.beta = beta
-        self.replay_capacity = replay_capacity
         self.log_interval = log_interval
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
         self.agent_state_kwargs = agent_state_kwargs or {}
-
-        @jax.jit
-        def iteration(train_state, sampler_state, replay_state, rng):
-            sampler_state, batch = self.sampler.collect(train_state.params,
-                                                        sampler_state)
-            # flatten (T, B) transitions to (T*B,) slots
-            flat = lambda x: x.reshape((-1,) + x.shape[2:])
-            trans = {
-                "observation": flat(batch.observation),
-                "action": flat(batch.action),
-                "reward": flat(batch.reward),
-                "done": flat(batch.done),
-                "timeout": flat(batch.timeout),
-                "next_observation": flat(batch.next_observation),
-            }
-            replay_state = dreplay.insert(replay_state, trans)
-
-            def do_update(carry, k_up):
-                ts, rs = carry
-                k_s, k_u = jax.random.split(k_up)
-                mb, idx, w = dreplay.sample(rs, k_s, self.batch_size,
-                                            uniform=not self.prioritized,
-                                            beta=self.beta)
-                algo_batch = {
-                    "observation": mb["observation"],
-                    "action": mb["action"],
-                    "return_": mb["reward"],
-                    "bootstrap": (1.0 - mb["done"].astype(F32))
-                    + mb["done"].astype(F32) * mb["timeout"].astype(F32),
-                    "next_observation": mb["next_observation"],
-                    "n_used": jnp.ones_like(mb["reward"], jnp.int32),
-                    "is_weights": w,
-                }
-                ts, info = self.algo.update(ts, algo_batch, k_u)
-                if self.prioritized:
-                    rs = dreplay.update_priorities(rs, idx, info.extra["td_abs"])
-                return (ts, rs), info
-
-            ks = jax.random.split(rng, self.k)
-            (train_state, replay_state), infos = jax.lax.scan(
-                do_update, (train_state, replay_state), ks)
-            info = jax.tree_util.tree_map(lambda x: x[-1], infos)
-            return train_state, sampler_state, replay_state, info
-
-        self._iteration = iteration
+        self.replay = replay if replay is not None else DeviceReplay(
+            replay_capacity, prioritized=prioritized, beta=beta)
+        self.loop = TrainLoop(sampler, algo, replay=self.replay,
+                              batch_size=batch_size,
+                              updates_per_collect=updates_per_collect,
+                              fuse=fuse)
 
     def run(self, rng, params=None, restore: bool = False):
-        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        k1, k2, k3, _ = jax.random.split(rng, 4)
         if params is None:
             params = self.sampler.agent.init_params(k1)
         train_state = self.algo.init_train_state(k2, params)
         sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+        replay_state = self.replay.init(transition_example(self.sampler.env))
 
-        # warm up replay with random-policy transitions via one example
-        example = self._transition_example()
-        replay_state = dreplay.init_replay(example, self.replay_capacity)
+        start_iter = 0
+        restored = False
         if restore and self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
             (train_state, replay_state), manifest = restore_checkpoint(
                 self.ckpt_dir, (train_state, replay_state))
+            start_iter = manifest["extra"].get("iteration", 0)
+            restored = True
+
+        # fill to min_replay before training, through the SAME jitted
+        # collect+insert the fused iteration traces (no per-pass re-jit);
+        # a restored buffer that already covers min_replay skips warmup
         steps_per_iter = self.sampler.horizon * self.sampler.n_envs
-        # fill to min_replay before training
-        warm = 0
+        warm = int(getattr(replay_state, "filled", 0)) if restored else 0
         while warm < self.min_replay:
-            rng, k = jax.random.split(rng)
-            sampler_state, batch = jax.jit(self.sampler.collect)(
-                train_state.params, sampler_state)
-            flat = lambda x: x.reshape((-1,) + x.shape[2:])
-            trans = {
-                "observation": flat(batch.observation),
-                "action": flat(batch.action),
-                "reward": flat(batch.reward),
-                "done": flat(batch.done),
-                "timeout": flat(batch.timeout),
-                "next_observation": flat(batch.next_observation),
-            }
-            replay_state = jax.jit(dreplay.insert)(replay_state, trans)
+            rng, _ = jax.random.split(rng)
+            sampler_state, replay_state = self.loop.collect_insert(
+                train_state.params, sampler_state, replay_state)
             warm += steps_per_iter
 
-        t0 = time.time()
-        last_info = None
-        for it in range(self.n_iterations):
-            rng, k = jax.random.split(rng)
-            train_state, sampler_state, replay_state, info = self._iteration(
-                train_state, sampler_state, replay_state, k)
-            last_info = info
-            if (it + 1) % self.log_interval == 0:
-                stats = self.sampler.traj_stats(sampler_state)
-                sampler_state = self.sampler.reset_stats(sampler_state)
-                sps = steps_per_iter * self.log_interval / max(
-                    time.time() - t0, 1e-9)
-                t0 = time.time()
-                extra = {k2: v for k2, v in info.extra.items()
-                         if jnp.ndim(v) == 0}
-                self.logger.record((it + 1) * steps_per_iter, {
-                    "iter": it + 1, "loss": info.loss,
-                    "samples_per_sec": sps, **stats, **extra})
-            if self.ckpt_dir and self.ckpt_interval and \
-                    (it + 1) % self.ckpt_interval == 0:
-                save_checkpoint(self.ckpt_dir, it + 1,
-                                (train_state, replay_state),
-                                extra={"iteration": it + 1})
+        train_state, sampler_state, replay_state, last_info = self.loop.drive(
+            rng, train_state, sampler_state, replay_state,
+            n_iterations=self.n_iterations, log_interval=self.log_interval,
+            logger=self.logger, start_iter=start_iter,
+            ckpt_dir=self.ckpt_dir, ckpt_interval=self.ckpt_interval,
+            ckpt_payload=lambda ts, rs: (ts, rs))
         return train_state, sampler_state, last_info
-
-    def _transition_example(self):
-        obs = self.sampler.env.observation_space.null_value()
-        act = self.sampler.env.action_space.null_value()
-        return {
-            "observation": jnp.asarray(obs),
-            "action": jnp.asarray(act),
-            "reward": jnp.zeros((), F32),
-            "done": jnp.zeros((), bool),
-            "timeout": jnp.zeros((), bool),
-            "next_observation": jnp.asarray(obs),
-        }

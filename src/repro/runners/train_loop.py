@@ -1,0 +1,189 @@
+"""Scan-fused training loop — one compiled program per log window.
+
+The synchronous runners used to dispatch one jitted program per iteration
+and return metrics to the host every time.  TrainLoop instead compiles
+``log_interval`` iterations of (collect -> [insert -> sample -> update^k])
+into ONE ``lax.scan``-over-iterations program; per-iteration metrics come
+back stacked, and the host touches device data only at log/checkpoint
+boundaries.  Amortizing dispatch across the fused window is the ROADMAP
+"fast as the hardware allows" direction — fewer host<->device round trips,
+and XLA sees the whole window at once.
+
+The loop is algorithm-agnostic: it consumes the algorithm's declarative
+``BatchSpec`` (core/batch_spec.py) through ``make_algo_batch`` and a
+``ReplayLike`` backend (replay/interface.py), so all three families —
+deep Q-learning, policy gradients, Q-value policy gradients — run through
+the same code path, the paper's shared-infrastructure thesis made literal.
+
+``fuse=False`` keeps the per-iteration dispatch behavior (one jitted call
+per iteration) — the baseline benchmarks/bench_learning.py compares against.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.batch_spec import make_algo_batch
+from ..replay.interface import ReplayLike
+from ..train.checkpoint import save_checkpoint
+from ..utils.logger import Logger
+
+
+@partial(jax.jit, static_argnums=1)
+def split_keys(rng, n: int):
+    """n sequential (rng, k) splits as ONE compiled scan — the same key
+    stream as one-split-per-iteration in the unfused loop, so fused and
+    unfused runs see identical keys, without n host dispatches."""
+    def body(r, _):
+        r, k = jax.random.split(r)
+        return r, k
+    return jax.lax.scan(body, rng, None, length=n)
+
+
+def last_of(stacked):
+    return jax.tree_util.tree_map(lambda x: x[-1], stacked)
+
+
+class TrainLoop:
+    """Unified synchronous loop over sampler + algo (+ device replay).
+
+    On-policy (spec.mode == "rollout"):  collect -> update.
+    Replayed  (spec.mode == "transition"): collect -> insert -> k x
+    (sample -> update -> priority update), all inside the fused window.
+    """
+
+    def __init__(self, sampler, algo, *, replay: Optional[ReplayLike] = None,
+                 batch_size: Optional[int] = None,
+                 updates_per_collect: int = 1, fuse: bool = True):
+        spec = algo.batch_spec
+        if spec is None:
+            raise ValueError(f"{type(algo).__name__} declares no BatchSpec")
+        if spec.mode == "sequence":
+            raise ValueError("sequence-mode algorithms (R2D1) need the host "
+                             "sequence replay — use AsyncR2D1Runner")
+        if spec.replayed:
+            if replay is None or not replay.device_resident:
+                raise ValueError("replayed algorithms need a device-resident "
+                                 "ReplayLike (see AsyncRunner for host replay)")
+            if batch_size is None:
+                raise ValueError("replayed algorithms need batch_size")
+        self.sampler, self.algo, self.spec = sampler, algo, spec
+        self.replay = replay
+        self.batch_size = batch_size
+        self.k = updates_per_collect
+        self.fuse = fuse
+        self._step = jax.jit(self._iteration)
+        self._window = jax.jit(self._window_impl)
+        # ONE jitted collect+insert, shared by warmup and (via the traced
+        # impl) every fused iteration — no per-pass re-jit.
+        self.collect_insert = jax.jit(self._collect_insert_impl)
+
+    # -- pure bodies (traced by both the fused and per-iteration paths) -----
+    def _collect_insert_impl(self, params, sampler_state, replay_state):
+        sampler_state, batch = self.sampler.collect(params, sampler_state)
+        replay_state = self.replay.insert(replay_state, batch)
+        return sampler_state, replay_state
+
+    def _iteration(self, train_state, sampler_state, replay_state, rng):
+        if self.spec.on_policy:
+            sampler_state, batch = self.sampler.collect(train_state.params,
+                                                        sampler_state)
+            bootstrap = self.sampler.bootstrap_value(train_state.params,
+                                                     sampler_state)
+            algo_batch = make_algo_batch(self.spec, batch,
+                                         {"bootstrap_value": bootstrap})
+            train_state, info = self.algo.update(train_state, algo_batch, rng)
+            return train_state, sampler_state, replay_state, info
+
+        sampler_state, replay_state = self._collect_insert_impl(
+            train_state.params, sampler_state, replay_state)
+
+        def do_update(carry, k_up):
+            ts, rs = carry
+            k_s, k_u = jax.random.split(k_up)
+            mb, idx, w = self.replay.sample(rs, k_s, self.batch_size)
+            algo_batch = make_algo_batch(self.spec, mb, {"is_weights": w})
+            ts, info = self.algo.update(ts, algo_batch, k_u)
+            rs = self.replay.update_priorities(
+                rs, idx, *(info.extra[k] for k in self.spec.priority_keys))
+            return (ts, rs), info
+
+        ks = jax.random.split(rng, self.k)
+        (train_state, replay_state), infos = jax.lax.scan(
+            do_update, (train_state, replay_state), ks)
+        return train_state, sampler_state, replay_state, last_of(infos)
+
+    def _window_impl(self, train_state, sampler_state, replay_state, keys):
+        def body(carry, k):
+            ts, ss, rs = carry
+            ts, ss, rs, info = self._iteration(ts, ss, rs, k)
+            return (ts, ss, rs), info
+
+        (ts, ss, rs), infos = jax.lax.scan(
+            body, (train_state, sampler_state, replay_state), keys)
+        return ts, ss, rs, infos
+
+    # -- host drivers --------------------------------------------------------
+    def run_window(self, train_state, sampler_state, replay_state, keys):
+        """Run len(keys) iterations; returns (ts, ss, rs, stacked infos).
+        Fused: one device program.  Unfused: one dispatch per iteration."""
+        if self.fuse:
+            return self._window(train_state, sampler_state, replay_state, keys)
+        infos = []
+        for i in range(keys.shape[0]):
+            train_state, sampler_state, replay_state, info = self._step(
+                train_state, sampler_state, replay_state, keys[i])
+            infos.append(info)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *infos)
+        return train_state, sampler_state, replay_state, stacked
+
+    def drive(self, rng, train_state, sampler_state, replay_state, *,
+              n_iterations: int, log_interval: int, logger: Logger,
+              start_iter: int = 0, ckpt_dir: Optional[str] = None,
+              ckpt_interval: int = 0,
+              ckpt_payload: Optional[Callable] = None):
+        """Host loop: run windows to the next log/checkpoint boundary, log
+        stacked metrics, save, repeat.  Returns (ts, ss, rs, last_info).
+
+        Each DISTINCT window length compiles its own fused program (jit
+        retraces on the keys' leading shape); misaligned log/ckpt intervals
+        cycle through a small fixed set of lengths, so the compile cost is
+        bounded by that set, paid once per length."""
+        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
+        t0 = time.time()
+        since_log = 0
+        last_info = None
+        it = start_iter
+        while it < n_iterations:
+            boundary = it + log_interval - (it % log_interval)
+            if ckpt_dir and ckpt_interval:
+                boundary = min(boundary,
+                               it + ckpt_interval - (it % ckpt_interval))
+            boundary = min(boundary, n_iterations)
+            rng, keys = split_keys(rng, boundary - it)
+            train_state, sampler_state, replay_state, infos = self.run_window(
+                train_state, sampler_state, replay_state, keys)
+            last_info = last_of(infos)
+            since_log += boundary - it
+            it = boundary
+            if it % log_interval == 0:
+                stats = self.sampler.traj_stats(sampler_state)
+                sampler_state = self.sampler.reset_stats(sampler_state)
+                sps = steps_per_iter * since_log / max(time.time() - t0, 1e-9)
+                t0, since_log = time.time(), 0
+                extra = {k: v for k, v in last_info.extra.items()
+                         if jnp.ndim(v) == 0}
+                logger.record(it * steps_per_iter, {
+                    "iter": it, "loss": last_info.loss,
+                    "grad_norm": last_info.grad_norm,
+                    "samples_per_sec": sps, **stats, **extra})
+            if ckpt_dir and ckpt_interval and it % ckpt_interval == 0:
+                payload = (train_state if ckpt_payload is None
+                           else ckpt_payload(train_state, replay_state))
+                save_checkpoint(ckpt_dir, it, payload,
+                                extra={"iteration": it})
+        return train_state, sampler_state, replay_state, last_info

@@ -2,7 +2,7 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.algos.pg.gae import gae_scan, gae_associative, discounted_returns
 from repro.train.optim import adam, sgd, soft_update, linear_warmup_cosine, \

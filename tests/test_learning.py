@@ -88,15 +88,19 @@ def test_sac_improves_pendulum(rng):
     actor = make_sac_actor(3, 1, hidden=(64, 64))
     critic = make_q_critic(3, 1, hidden=(64, 64))
     agent = make_sac_agent(actor, 1)
+    # CPU-budget hyperparameters: pendulum needs a few thousand updates, so
+    # lean on the replay ratio (updates_per_collect) rather than more env
+    # steps; init_alpha=0.2 keeps early exploration from drowning the critic.
+    # The scan-fused TrainLoop makes this whole run ~15s on CPU.
     algo = SAC(actor.apply, critic.apply, adam_lr(1e-3), adam_lr(1e-3),
-               act_dim=1)
+               act_dim=1, init_alpha=0.2)
     sampler = SerialSampler(env, agent, n_envs=8, horizon=32)
     k1, _ = jax.random.split(rng)
     params = {"actor": actor.init(k1), "critic": critic.init(k1)}
     runner = OffPolicyRunner(sampler, algo, replay_capacity=16384,
-                             batch_size=128, n_iterations=80,
-                             updates_per_collect=4, min_replay=1024,
-                             log_interval=80, logger=_Null())
+                             batch_size=128, n_iterations=160,
+                             updates_per_collect=32, min_replay=1024,
+                             log_interval=160, logger=_Null())
     # baseline: random-ish initial policy return (pendulum episodes are 200
     # steps, so collect enough for full episodes to complete)
     ss0 = sampler.init(rng)
