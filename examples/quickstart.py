@@ -14,7 +14,7 @@ from repro.agents import make_categorical_pg_agent
 from repro.algos import PPO
 from repro.core.distributions import Categorical
 from repro.models.rl_models import make_pg_mlp
-from repro.samplers import SerialSampler
+from repro.samplers import EvalSampler, SerialSampler
 from repro.runners import OnPolicyRunner
 from repro.train.optim import adam
 
@@ -26,7 +26,12 @@ def main():
     algo = PPO(model.apply, adam(7e-4, grad_clip=0.5),
                distribution=Categorical(2), epochs=4, minibatches=4)
     sampler = SerialSampler(env, agent, n_envs=16, horizon=64)
-    runner = OnPolicyRunner(sampler, algo, n_iterations=50, log_interval=10)
+    # offline evaluation (paper §2.1): dedicated envs, greedy agent,
+    # reported as eval_* in every log row
+    evaluator = EvalSampler(env, agent, n_envs=8, max_steps=2000,
+                            max_episodes=8)
+    runner = OnPolicyRunner(sampler, algo, n_iterations=50, log_interval=10,
+                            eval_sampler=evaluator)
     train_state, sampler_state, _ = runner.run(jax.random.PRNGKey(0))
     print("final stats:", {k: float(v) for k, v in
                            sampler.traj_stats(sampler_state).items()})

@@ -25,6 +25,10 @@ class AgentDef(NamedTuple):
     value: Callable                # (params, obs, pa, pr, state) -> value (bootstrap)
     initial_state: Callable        # batch -> state (None for feed-forward)
     recurrent: bool = False
+    # greedy/deterministic counterpart of ``step`` for offline evaluation
+    # (paper §2.1 eval mode); same signature.  ``core.agent.as_eval``
+    # selects it; None means the sampling step doubles as eval.
+    eval_step: Optional[Callable] = None
 
 
 def make_categorical_pg_agent(model) -> AgentDef:
@@ -41,7 +45,14 @@ def make_categorical_pg_agent(model) -> AgentDef:
         _, v = model.apply(params, obs, prev_action, prev_reward)
         return v
 
-    return AgentDef(model.init, step, value, model.initial_state)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        logits, value = model.apply(params, obs, prev_action, prev_reward)
+        action = dist.mode(logits)
+        logp = dist.log_likelihood(action, logits)
+        return action, {"logp": logp, "value": value}, state
+
+    return AgentDef(model.init, step, value, model.initial_state,
+                    eval_step=eval_step)
 
 
 def make_gaussian_pg_agent(model, act_dim: int) -> AgentDef:
@@ -58,7 +69,14 @@ def make_gaussian_pg_agent(model, act_dim: int) -> AgentDef:
         _, v = model.apply(params, obs, prev_action, prev_reward)
         return v
 
-    return AgentDef(model.init, step, value, model.initial_state)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        (mean, log_std), value = model.apply(params, obs, prev_action,
+                                             prev_reward)
+        logp = dist.log_likelihood(mean, mean, log_std)
+        return mean, {"logp": logp, "value": value}, state
+
+    return AgentDef(model.init, step, value, model.initial_state,
+                    eval_step=eval_step)
 
 
 def make_dqn_agent(model, n_actions: int, *, n_atoms: int = 0,
@@ -86,7 +104,13 @@ def make_dqn_agent(model, n_actions: int, *, n_atoms: int = 0,
     def initial_state(batch, epsilon=0.05):
         return {"epsilon": jnp.full((batch,), epsilon, F32)}
 
-    return AgentDef(model.init, step, value, initial_state)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        """Greedy (epsilon=0) — the paper evaluates DQN near-greedily."""
+        q = q_values(params, obs, prev_action, prev_reward)
+        return jnp.argmax(q, axis=-1), {"q": q}, state
+
+    return AgentDef(model.init, step, value, initial_state,
+                    eval_step=eval_step)
 
 
 def make_r2d1_agent(model, n_actions: int) -> AgentDef:
@@ -110,7 +134,15 @@ def make_r2d1_agent(model, n_actions: int) -> AgentDef:
         return {"lstm": model.initial_state(batch),
                 "epsilon": jnp.full((batch,), epsilon, F32)}
 
-    return AgentDef(model.init, step, value, initial_state, recurrent=True)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        q, lstm_state = model.apply(params, obs[None], prev_action[None],
+                                    prev_reward[None], state["lstm"])
+        q = q[0]
+        return (jnp.argmax(q, axis=-1), {"q": q},
+                {"lstm": lstm_state, "epsilon": state["epsilon"]})
+
+    return AgentDef(model.init, step, value, initial_state, recurrent=True,
+                    eval_step=eval_step)
 
 
 def make_ddpg_agent(actor_model, act_dim: int, *, expl_noise=0.1) -> AgentDef:
@@ -125,7 +157,12 @@ def make_ddpg_agent(actor_model, act_dim: int, *, expl_noise=0.1) -> AgentDef:
     def value(params, obs, prev_action, prev_reward, state):
         raise NotImplementedError("QPG agents bootstrap via critic in the algo")
 
-    return AgentDef(actor_model.init, step, value, actor_model.initial_state)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        p = params["actor"] if isinstance(params, dict) and "actor" in params else params
+        return actor_model.apply(p, obs), {}, state
+
+    return AgentDef(actor_model.init, step, value, actor_model.initial_state,
+                    eval_step=eval_step)
 
 
 def make_sac_agent(actor_model, act_dim: int) -> AgentDef:
@@ -140,4 +177,12 @@ def make_sac_agent(actor_model, act_dim: int) -> AgentDef:
     def value(params, obs, prev_action, prev_reward, state):
         raise NotImplementedError("QPG agents bootstrap via critic in the algo")
 
-    return AgentDef(actor_model.init, step, value, actor_model.initial_state)
+    def eval_step(params, rng, obs, prev_action, prev_reward, state):
+        """Deterministic squashed mean (standard SAC evaluation policy)."""
+        p = params["actor"] if isinstance(params, dict) and "actor" in params else params
+        mean, _ = actor_model.apply(p, obs)
+        action = jnp.tanh(mean)
+        return action, {"logp": jnp.zeros(action.shape[:1], F32)}, state
+
+    return AgentDef(actor_model.init, step, value, actor_model.initial_state,
+                    eval_step=eval_step)

@@ -28,9 +28,18 @@ class Agent:
       init_params(rng, example_inputs) -> params
       step(params, rng, agent_inputs, state) -> (AgentStep, new_state)
       value(params, agent_inputs, state)      (for bootstrapping, PG algos)
+
+    Modes (paper §2.1): rlpyt agents switch between ``sample_mode`` during
+    training and ``eval_mode`` for periodic offline evaluation in dedicated
+    eval envs.  Functional agents can't flip internal flags, so the mode is
+    a second step function: ``eval_step`` has the same signature as ``step``
+    but acts greedily/deterministically (argmax logits, distribution mean,
+    epsilon=0) — ``as_eval`` below selects it.  ``samplers/eval.py`` builds
+    its rollout on the eval-mode agent.
     """
 
     recurrent = False
+    eval_step = None  # greedy/deterministic counterpart of ``step``
 
     def __init__(self, model_init: Callable, model_apply: Callable, distribution):
         self.model_init = model_init
@@ -49,6 +58,26 @@ class Agent:
 
     def value(self, params, agent_inputs: AgentInputs, state=None):
         raise NotImplementedError
+
+
+def as_eval(agent):
+    """The agent in evaluation mode: same interface, greedy/deterministic
+    action selection (paper §2.1 offline evaluation).
+
+    Works structurally on anything with a ``step`` and an optional
+    ``eval_step`` — class-based Agents and AgentDef namedtuples alike.
+    Agents that declare no ``eval_step`` are returned unchanged (their
+    sampling behavior is already their evaluation behavior, e.g. a
+    random-action baseline)."""
+    eval_step = getattr(agent, "eval_step", None)
+    if eval_step is None:
+        return agent
+    if hasattr(agent, "_replace"):  # AgentDef and friends
+        return agent._replace(step=eval_step)
+    import copy
+    out = copy.copy(agent)
+    out.step = eval_step
+    return out
 
 
 class AlternatingAgentMixin:

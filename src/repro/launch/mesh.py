@@ -27,6 +27,16 @@ def make_test_mesh(n_data: int = 2, n_model: int = 2):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
+def make_data_mesh(n_data: int = 0, axis: str = "data"):
+    """1-D data-parallel mesh for SPMD RL training (paper §2.4: replicated
+    model, sharded envs/replay, all-reduced gradients).  This is the mesh
+    ShardedSampler + TrainLoop(mesh=...) expect; n_data=0 uses every local
+    device.  RL models are small, so there is no 'model' axis — scaling is
+    pure data parallelism, unlike the LM meshes above."""
+    n = n_data or jax.local_device_count()
+    return jax.make_mesh((n,), (axis,))
+
+
 def install(mesh):
     """Register mesh with the sharding-rule module (dp/tp axis names)."""
     if mesh is None:

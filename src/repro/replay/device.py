@@ -6,6 +6,13 @@ jnp arrays, insert/sample are pure functions, so an entire
 collect->insert->sample->update step compiles to ONE program (no host
 round-trip).  Prioritized sampling uses a jnp sum-tree with fixed-depth
 descent (mirrored by the Pallas kernel in kernels/sum_tree).
+
+Under the SPMD TrainLoop (paper §2.4) these SAME pure functions run
+per-shard inside shard_map: DeviceReplay.init_sharded (replay/interface.py)
+lays out n_shards independent rings — storage and sum tree partitioned over
+the data axis, cursor/filled replicated — and the shard's local block is a
+plain ReplayState, so insert/sample/update_priorities need no mesh
+awareness at all.
 """
 from __future__ import annotations
 

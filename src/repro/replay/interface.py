@@ -23,6 +23,7 @@ from typing import Any
 import numpy as np
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from ..core.batch_spec import rollout_to_transitions
 from . import device as dreplay
@@ -106,6 +107,46 @@ class DeviceReplay(ReplayLike):
         (td_abs,) = priorities
         return dreplay.update_priorities(state, indices, td_abs,
                                          alpha=self.alpha)
+
+    # -- SPMD data-parallel views (paper §2.4: replay sharded across GPUs) --
+    #
+    # Under a data mesh each shard owns an independent ring of
+    # capacity/n_shards slots: storage leaves are partitioned over their slot
+    # axis, each shard keeps its OWN sum tree, and cursor/filled stay
+    # replicated (every shard inserts the same number of transitions at the
+    # same times, so the ring arithmetic is identical everywhere).  The
+    # global state is an ordinary pytree — checkpoints and host code see one
+    # object — with the per-shard trees stacked on a leading (n_shards,)
+    # axis.  Inside shard_map, ``local_view``/``merge_view`` strip/restore
+    # that axis so insert/sample/update_priorities run UNCHANGED on the
+    # shard's local ReplayState.
+
+    def init_sharded(self, example, n_shards: int) -> dreplay.ReplayState:
+        """Global state for ``n_shards`` independent per-shard rings of
+        capacity // n_shards slots each."""
+        assert self.capacity % n_shards == 0, (self.capacity, n_shards)
+        local = dreplay.init_replay(example, self.capacity // n_shards)
+        return local._replace(
+            storage=jax.tree_util.tree_map(
+                lambda l: jnp.zeros((self.capacity,) + l.shape[1:], l.dtype),
+                local.storage),
+            tree=jnp.zeros((n_shards,) + local.tree.shape, local.tree.dtype))
+
+    @staticmethod
+    def shard_spec(axis: str) -> dreplay.ReplayState:
+        """PartitionSpec prefix tree for a state built by ``init_sharded``."""
+        return dreplay.ReplayState(storage=P(axis), cursor=P(), filled=P(),
+                                   tree=P(axis))
+
+    @staticmethod
+    def local_view(state: dreplay.ReplayState) -> dreplay.ReplayState:
+        """Shard's block (tree (1, 2*size)) -> plain local ReplayState."""
+        return state._replace(tree=state.tree[0])
+
+    @staticmethod
+    def merge_view(state: dreplay.ReplayState) -> dreplay.ReplayState:
+        """Inverse of ``local_view`` before leaving the shard_map body."""
+        return state._replace(tree=state.tree[None])
 
 
 class HostTransitionReplay(ReplayLike):

@@ -1,7 +1,9 @@
 """Runners (paper §6.1): connect sampler + agent + algorithm, manage the
 training loop, diagnostics, and checkpoints.  The synchronous runners are
 thin shells over the scan-fused TrainLoop; batches reach every algorithm
-through its declarative BatchSpec."""
+through its declarative BatchSpec.  ``mesh=``/``axis=`` turn the fused
+window into one shard_map'd SPMD program (paper §2.4 sync multi-GPU);
+``eval_sampler=`` adds offline evaluation at log boundaries (§2.1)."""
 from .train_loop import TrainLoop
 from .minibatch import OnPolicyRunner, OffPolicyRunner
 from .async_rl import AsyncRunner, AsyncR2D1Runner

@@ -7,6 +7,11 @@ the algorithm through its declarative BatchSpec, so no runner builds an
 algorithm batch by hand, and both compile ``log_interval`` iterations into
 ONE device program via TrainLoop (``fuse=False`` restores per-iteration
 dispatch for benchmarking).
+
+Both shells accept ``mesh=``/``axis=`` (with a ShardedSampler) for the SPMD
+data-parallel mode — sharded envs + per-shard replay + psum'd gradients in
+one shard_map'd window (paper §2.4) — and ``eval_sampler=`` for periodic
+offline evaluation at log boundaries (paper §2.1).
 """
 from __future__ import annotations
 
@@ -26,13 +31,15 @@ class OnPolicyRunner:
     def __init__(self, sampler, algo, *, n_iterations: int,
                  log_interval: int = 10, logger: Optional[Logger] = None,
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
-                 fuse: bool = True):
+                 fuse: bool = True, mesh=None, axis: str = "data",
+                 eval_sampler=None):
         self.sampler, self.algo = sampler, algo
         self.n_iterations = n_iterations
         self.log_interval = log_interval
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
-        self.loop = TrainLoop(sampler, algo, fuse=fuse)
+        self.eval_sampler = eval_sampler
+        self.loop = TrainLoop(sampler, algo, fuse=fuse, mesh=mesh, axis=axis)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
@@ -48,14 +55,17 @@ class OnPolicyRunner:
             rng, train_state, sampler_state, None,
             n_iterations=self.n_iterations, log_interval=self.log_interval,
             logger=self.logger, start_iter=start_iter,
-            ckpt_dir=self.ckpt_dir, ckpt_interval=self.ckpt_interval)
+            ckpt_dir=self.ckpt_dir, ckpt_interval=self.ckpt_interval,
+            eval_sampler=self.eval_sampler)
         return train_state, sampler_state, last_info
 
 
 class OffPolicyRunner:
     """DQN/DDPG/TD3/SAC over a device-resident ReplayLike: the
     (collect + insert + sample + update^k) composite is one program, and the
-    whole log window is one scan over iterations."""
+    whole log window is one scan over iterations.  In mesh mode the replay
+    is initialized sharded — n_shards independent rings — and each shard
+    samples batch_size / n_shards per update (global batch unchanged)."""
 
     def __init__(self, sampler, algo, *, replay_capacity: int,
                  batch_size: int, n_iterations: int, updates_per_collect: int = 1,
@@ -64,7 +74,8 @@ class OffPolicyRunner:
                  log_interval: int = 10, logger: Optional[Logger] = None,
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
                  agent_state_kwargs: Optional[dict] = None,
-                 replay: Optional[ReplayLike] = None, fuse: bool = True):
+                 replay: Optional[ReplayLike] = None, fuse: bool = True,
+                 mesh=None, axis: str = "data", eval_sampler=None):
         self.sampler, self.algo = sampler, algo
         self.n_iterations = n_iterations
         self.min_replay = min_replay
@@ -72,12 +83,14 @@ class OffPolicyRunner:
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
         self.agent_state_kwargs = agent_state_kwargs or {}
+        self.eval_sampler = eval_sampler
+        self.mesh, self.axis = mesh, axis
         self.replay = replay if replay is not None else DeviceReplay(
             replay_capacity, prioritized=prioritized, beta=beta)
         self.loop = TrainLoop(sampler, algo, replay=self.replay,
                               batch_size=batch_size,
                               updates_per_collect=updates_per_collect,
-                              fuse=fuse)
+                              fuse=fuse, mesh=mesh, axis=axis)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3, _ = jax.random.split(rng, 4)
@@ -85,7 +98,12 @@ class OffPolicyRunner:
             params = self.sampler.agent.init_params(k1)
         train_state = self.algo.init_train_state(k2, params)
         sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
-        replay_state = self.replay.init(transition_example(self.sampler.env))
+        example = transition_example(self.sampler.env)
+        if self.mesh is not None:
+            replay_state = self.replay.init_sharded(example,
+                                                    self.loop.n_shards)
+        else:
+            replay_state = self.replay.init(example)
 
         start_iter = 0
         restored = False
@@ -97,19 +115,23 @@ class OffPolicyRunner:
 
         # fill to min_replay before training, through the SAME jitted
         # collect+insert the fused iteration traces (no per-pass re-jit);
-        # a restored buffer that already covers min_replay skips warmup
+        # a restored buffer that already covers min_replay skips warmup.
+        # min_replay counts GLOBAL transitions; in mesh mode ``filled`` is
+        # the per-shard count, so scale it back up.
         steps_per_iter = self.sampler.horizon * self.sampler.n_envs
-        warm = int(getattr(replay_state, "filled", 0)) if restored else 0
+        n_shards = self.loop.n_shards if self.mesh is not None else 1
+        warm = (int(getattr(replay_state, "filled", 0)) * n_shards
+                if restored else 0)
         while warm < self.min_replay:
             rng, _ = jax.random.split(rng)
             sampler_state, replay_state = self.loop.collect_insert(
                 train_state.params, sampler_state, replay_state)
             warm += steps_per_iter
-
         train_state, sampler_state, replay_state, last_info = self.loop.drive(
             rng, train_state, sampler_state, replay_state,
             n_iterations=self.n_iterations, log_interval=self.log_interval,
             logger=self.logger, start_iter=start_iter,
             ckpt_dir=self.ckpt_dir, ckpt_interval=self.ckpt_interval,
-            ckpt_payload=lambda ts, rs: (ts, rs))
+            ckpt_payload=lambda ts, rs: (ts, rs),
+            eval_sampler=self.eval_sampler)
         return train_state, sampler_state, last_info

@@ -17,19 +17,40 @@ the same code path, the paper's shared-infrastructure thesis made literal.
 
 ``fuse=False`` keeps the per-iteration dispatch behavior (one jitted call
 per iteration) — the baseline benchmarks/bench_learning.py compares against.
+
+SPMD data parallelism (paper §2.4 synchronous multi-GPU RL)
+-----------------------------------------------------------
+Passing ``mesh=``/``axis=`` turns the SAME fused window into one
+``shard_map``'d program over the data axis: each device steps its env shard
+(ShardedSampler.local_collect), inserts into and samples from its OWN slice
+of the device replay (DeviceReplay.init_sharded), and computes gradients on
+its local batch; the only cross-device traffic is the pmean of gradients
+(``train.optim.cross_replica`` wraps every Optimizer the algorithm holds),
+the psum'd episode stats, and the gathered metrics.  Params and optimizer
+state stay replicated, so the sharded update IS the serial update on the
+concatenated batch — rlpyt's "replicated model, all-reduced gradients",
+compiled instead of spawned.
+
+Periodic offline evaluation (paper §2.1) plugs in at log boundaries: pass
+``eval_sampler=`` to ``drive`` (or the runner shells) and eval metrics are
+reported through the Logger alongside training stats.
 """
 from __future__ import annotations
 
+import copy
 import time
 from functools import partial
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
 
 from ..core.batch_spec import make_algo_batch
 from ..replay.interface import ReplayLike
 from ..train.checkpoint import save_checkpoint
+from ..train.optim import Optimizer, cross_replica
 from ..utils.logger import Logger
 
 
@@ -54,11 +75,18 @@ class TrainLoop:
     On-policy (spec.mode == "rollout"):  collect -> update.
     Replayed  (spec.mode == "transition"): collect -> insert -> k x
     (sample -> update -> priority update), all inside the fused window.
+
+    With ``mesh``/``axis`` the window is shard_map'd over the data axis
+    (see module docstring); the sampler must then be a ShardedSampler (or
+    expose the same ``local_collect``/``state_spec`` surface) on the same
+    mesh axis, and replayed algorithms shard both the replay state and the
+    sample batch (each shard draws batch_size / n_shards).
     """
 
     def __init__(self, sampler, algo, *, replay: Optional[ReplayLike] = None,
                  batch_size: Optional[int] = None,
-                 updates_per_collect: int = 1, fuse: bool = True):
+                 updates_per_collect: int = 1, fuse: bool = True,
+                 mesh=None, axis: str = "data"):
         spec = algo.batch_spec
         if spec is None:
             raise ValueError(f"{type(algo).__name__} declares no BatchSpec")
@@ -76,11 +104,42 @@ class TrainLoop:
         self.batch_size = batch_size
         self.k = updates_per_collect
         self.fuse = fuse
+        self.mesh, self.axis = mesh, axis
+        if mesh is not None:
+            if not hasattr(sampler, "local_collect"):
+                raise ValueError("mesh mode needs a sharded sampler exposing "
+                                 "local_collect/state_spec (ShardedSampler)")
+            if getattr(sampler, "axis", axis) != axis:
+                raise ValueError(f"sampler shards over {sampler.axis!r} but "
+                                 f"TrainLoop was given axis={axis!r}")
+            self.n_shards = mesh.shape[axis]
+            if spec.replayed:
+                if batch_size % self.n_shards:
+                    raise ValueError(f"batch_size {batch_size} not divisible "
+                                     f"by {self.n_shards} shards")
+                self._local_batch = batch_size // self.n_shards
+            # the psum seam: every Optimizer the algorithm holds pmeans
+            # grads over the data axis before stepping, so params/opt state
+            # stay replicated and the update equals the global-batch update —
+            # no algorithm changes its ``update``.  Wrap on a shallow copy:
+            # the caller's algo must stay usable outside this mesh (a pmean
+            # traced outside shard_map fails on the unbound axis name).
+            self.algo = algo = copy.copy(algo)
+            for name, val in list(vars(algo).items()):
+                if isinstance(val, Optimizer):
+                    setattr(algo, name, cross_replica(val, axis))
         self._step = jax.jit(self._iteration)
         self._window = jax.jit(self._window_impl)
+        # sharded programs are built lazily — their PartitionSpec trees need
+        # the actual state pytrees, which exist only once init() has run.
+        self._sharded_window = None
+        self._sharded_ci = None
         # ONE jitted collect+insert, shared by warmup and (via the traced
         # impl) every fused iteration — no per-pass re-jit.
-        self.collect_insert = jax.jit(self._collect_insert_impl)
+        if mesh is None:
+            self.collect_insert = jax.jit(self._collect_insert_impl)
+        else:
+            self.collect_insert = self._sharded_collect_insert
 
     # -- pure bodies (traced by both the fused and per-iteration paths) -----
     def _collect_insert_impl(self, params, sampler_state, replay_state):
@@ -127,10 +186,135 @@ class TrainLoop:
             body, (train_state, sampler_state, replay_state), keys)
         return ts, ss, rs, infos
 
+    # -- SPMD bodies (run INSIDE shard_map over self.axis) -------------------
+    def _replicate_info(self, info):
+        """Make the per-iteration OptInfo replicated: scalar leaves (losses,
+        means over the local batch) pmean to their global-batch value;
+        batch-leading leaves (per-sample td_abs) all-gather to full width."""
+        ax = self.axis
+
+        def rep(x):
+            x = jnp.asarray(x)
+            if x.ndim == 0:
+                return jax.lax.pmean(x, ax)
+            return jax.lax.all_gather(x, ax, axis=0, tiled=True)
+
+        return jax.tree_util.tree_map(rep, info)
+
+    def _iteration_local(self, train_state, sampler_state, replay_state, rng):
+        if self.spec.on_policy:
+            sampler_state, batch = self.sampler.local_collect(
+                train_state.params, sampler_state)
+            bootstrap = self.sampler.local_bootstrap(train_state.params,
+                                                     sampler_state)
+            algo_batch = make_algo_batch(self.spec, batch,
+                                         {"bootstrap_value": bootstrap})
+            train_state, info = self.algo.update(train_state, algo_batch, rng)
+            return (train_state, sampler_state, replay_state,
+                    self._replicate_info(info))
+
+        sampler_state, batch = self.sampler.local_collect(train_state.params,
+                                                          sampler_state)
+        replay_state = self.replay.insert(replay_state, batch)
+        shard = jax.lax.axis_index(self.axis)
+
+        def do_update(carry, k_up):
+            ts, rs = carry
+            k_s, k_u = jax.random.split(k_up)
+            # decorrelate replay draws across shards; the update key stays
+            # replicated so replicated computations stay replicated
+            mb, idx, w = self.replay.sample(rs, jax.random.fold_in(k_s, shard),
+                                            self._local_batch)
+            algo_batch = make_algo_batch(self.spec, mb, {"is_weights": w})
+            ts, info = self.algo.update(ts, algo_batch, k_u)
+            rs = self.replay.update_priorities(
+                rs, idx, *(info.extra[k] for k in self.spec.priority_keys))
+            return (ts, rs), info
+
+        ks = jax.random.split(rng, self.k)
+        (train_state, replay_state), infos = jax.lax.scan(
+            do_update, (train_state, replay_state), ks)
+        return (train_state, sampler_state, replay_state,
+                self._replicate_info(last_of(infos)))
+
+    def _sharded_window_impl(self, train_state, sampler_state, replay_state,
+                             keys):
+        if replay_state is not None:
+            replay_state = self.replay.local_view(replay_state)
+
+        def body(carry, k):
+            ts, ss, rs = carry
+            ts, ss, rs, info = self._iteration_local(ts, ss, rs, k)
+            return (ts, ss, rs), info
+
+        (ts, ss, rs), infos = jax.lax.scan(
+            body, (train_state, sampler_state, replay_state), keys)
+        if rs is not None:
+            rs = self.replay.merge_view(rs)
+        return ts, ss, rs, infos
+
+    def _build_sharded(self, sampler_state, replay_state):
+        ss_spec = self.sampler.state_spec(sampler_state)
+        if self.spec.on_policy:
+            def window(ts, ss, keys):
+                ts, ss, _, infos = self._sharded_window_impl(ts, ss, None, keys)
+                return ts, ss, infos
+            f = shard_map(window, mesh=self.mesh,
+                          in_specs=(P(), ss_spec, P()),
+                          out_specs=(P(), ss_spec, P()), check_rep=False)
+        else:
+            rs_spec = self.replay.shard_spec(self.axis)
+
+            def window(ts, ss, rs, keys):
+                return self._sharded_window_impl(ts, ss, rs, keys)
+            f = shard_map(window, mesh=self.mesh,
+                          in_specs=(P(), ss_spec, rs_spec, P()),
+                          out_specs=(P(), ss_spec, rs_spec, P()),
+                          check_rep=False)
+        self._sharded_window = jax.jit(f)
+
+    def _call_sharded(self, train_state, sampler_state, replay_state, keys):
+        if self._sharded_window is None:
+            self._build_sharded(sampler_state, replay_state)
+        if self.spec.on_policy:
+            ts, ss, infos = self._sharded_window(train_state, sampler_state,
+                                                 keys)
+            return ts, ss, None, infos
+        return self._sharded_window(train_state, sampler_state, replay_state,
+                                    keys)
+
+    def _sharded_collect_insert(self, params, sampler_state, replay_state):
+        if self._sharded_ci is None:
+            ss_spec = self.sampler.state_spec(sampler_state)
+            rs_spec = self.replay.shard_spec(self.axis)
+
+            def body(params, ss, rs):
+                ss, batch = self.sampler.local_collect(params, ss)
+                rs = self.replay.merge_view(
+                    self.replay.insert(self.replay.local_view(rs), batch))
+                return ss, rs
+            self._sharded_ci = jax.jit(shard_map(
+                body, mesh=self.mesh, in_specs=(P(), ss_spec, rs_spec),
+                out_specs=(ss_spec, rs_spec), check_rep=False))
+        return self._sharded_ci(params, sampler_state, replay_state)
+
     # -- host drivers --------------------------------------------------------
     def run_window(self, train_state, sampler_state, replay_state, keys):
         """Run len(keys) iterations; returns (ts, ss, rs, stacked infos).
-        Fused: one device program.  Unfused: one dispatch per iteration."""
+        Fused: one device program (shard_map'd over the data axis in mesh
+        mode).  Unfused: one dispatch per iteration."""
+        if self.mesh is not None:
+            if self.fuse:
+                return self._call_sharded(train_state, sampler_state,
+                                          replay_state, keys)
+            infos = []
+            for i in range(keys.shape[0]):
+                train_state, sampler_state, replay_state, info = \
+                    self._call_sharded(train_state, sampler_state,
+                                       replay_state, keys[i:i + 1])
+                infos.append(last_of(info))
+            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *infos)
+            return train_state, sampler_state, replay_state, stacked
         if self.fuse:
             return self._window(train_state, sampler_state, replay_state, keys)
         infos = []
@@ -145,15 +329,24 @@ class TrainLoop:
               n_iterations: int, log_interval: int, logger: Logger,
               start_iter: int = 0, ckpt_dir: Optional[str] = None,
               ckpt_interval: int = 0,
-              ckpt_payload: Optional[Callable] = None):
+              ckpt_payload: Optional[Callable] = None,
+              eval_sampler=None):
         """Host loop: run windows to the next log/checkpoint boundary, log
         stacked metrics, save, repeat.  Returns (ts, ss, rs, last_info).
+
+        ``eval_sampler`` (samplers/eval.py) triggers an offline evaluation —
+        dedicated envs, deterministic agent mode — at every log boundary;
+        its metrics land in the same Logger row under an ``eval_`` prefix
+        (paper §2.1 offline evaluation at checkpoints).
 
         Each DISTINCT window length compiles its own fused program (jit
         retraces on the keys' leading shape); misaligned log/ckpt intervals
         cycle through a small fixed set of lengths, so the compile cost is
         bounded by that set, paid once per length."""
         steps_per_iter = self.sampler.horizon * self.sampler.n_envs
+        # eval keys come from a forked stream so enabling/disabling eval
+        # never perturbs the training keys
+        eval_rng = jax.random.fold_in(rng, 0xE7A1)
         t0 = time.time()
         since_log = 0
         last_info = None
@@ -174,13 +367,17 @@ class TrainLoop:
                 stats = self.sampler.traj_stats(sampler_state)
                 sampler_state = self.sampler.reset_stats(sampler_state)
                 sps = steps_per_iter * since_log / max(time.time() - t0, 1e-9)
-                t0, since_log = time.time(), 0
                 extra = {k: v for k, v in last_info.extra.items()
                          if jnp.ndim(v) == 0}
-                logger.record(it * steps_per_iter, {
-                    "iter": it, "loss": last_info.loss,
-                    "grad_norm": last_info.grad_norm,
-                    "samples_per_sec": sps, **stats, **extra})
+                row = {"iter": it, "loss": last_info.loss,
+                       "grad_norm": last_info.grad_norm,
+                       "samples_per_sec": sps, **stats, **extra}
+                if eval_sampler is not None:
+                    em = eval_sampler.run(train_state.params,
+                                          jax.random.fold_in(eval_rng, it))
+                    row.update({f"eval_{k}": v for k, v in em.items()})
+                logger.record(it * steps_per_iter, row)
+                t0, since_log = time.time(), 0
             if ckpt_dir and ckpt_interval and it % ckpt_interval == 0:
                 payload = (train_state if ckpt_payload is None
                            else ckpt_payload(train_state, replay_state))

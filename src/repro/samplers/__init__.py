@@ -1,5 +1,7 @@
 """Samplers (paper §2.1): serial, sharded (parallel-GPU analogue), and
-alternating (double-buffered) — all producing identical (T, B) batches."""
+alternating (double-buffered) — all producing identical (T, B) batches —
+plus the offline EvalSampler (dedicated eval envs, eval-mode agent)."""
 from .serial import SerialSampler, RolloutBatch
 from .sharded import ShardedSampler
 from .alternating import AlternatingSampler
+from .eval import EvalSampler

@@ -1,0 +1,104 @@
+"""Offline evaluation sampler (paper §2.1: "evaluation of the agent in
+dedicated environment instances held separately from training").
+
+rlpyt's samplers optionally maintain eval env instances and run them, agent
+in eval mode, for a bounded number of steps/trajectories at each logging
+checkpoint.  Here the whole evaluation is ONE jitted program: fresh eval
+envs reset from the eval key, a ``lax.scan`` rollout with the agent's
+greedy/deterministic ``eval_step`` (core.agent.as_eval), and in-scan
+bookkeeping of completed episodes under both budgets —
+
+- max_steps:    total env steps across the eval batch (the scan horizon);
+- max_episodes: completed episodes counted toward the stats (completions
+  beyond the budget are masked out inside the scan, mirroring rlpyt's
+  max-trajectories cutoff without a host round-trip).
+
+Because eval envs are freshly reset each call and the agent is
+deterministic, ``run(params, rng)`` is a pure function: same params + same
+key => same metrics (the determinism contract tests/test_sharded_train.py
+pins down).  TrainLoop.drive invokes it at log boundaries and reports the
+metrics through the Logger under an ``eval_`` prefix.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.agent import as_eval
+from .serial import SerialSampler
+
+F32 = jnp.float32
+
+
+class EvalSampler:
+    """Dedicated eval envs + eval-mode agent, one jitted program per call.
+
+    n_envs eval envs run for max_steps // n_envs scanned steps; up to
+    ``max_episodes`` completed episodes feed the reported statistics
+    (None = no episode cap).  ``agent_state_kwargs`` seeds the eval agent
+    state (e.g. nothing for PG agents; DQN's epsilon is irrelevant because
+    the eval step is greedy)."""
+
+    def __init__(self, env_spec, agent, n_envs: int, max_steps: int, *,
+                 max_episodes: Optional[int] = None,
+                 agent_state_kwargs: Optional[dict] = None):
+        assert max_steps >= n_envs, (max_steps, n_envs)
+        self.env = env_spec
+        self.agent = as_eval(agent)
+        self.n_envs = n_envs
+        self.horizon = max_steps // n_envs
+        self.max_episodes = max_episodes
+        self.agent_state_kwargs = agent_state_kwargs or {}
+        self._sampler = SerialSampler(env_spec, self.agent, n_envs,
+                                      self.horizon)
+        self._run = jax.jit(self._run_impl)
+
+    def _run_impl(self, params, rng):
+        state = self._sampler.init(rng, self.agent_state_kwargs)
+        _, batch = self._sampler.collect(params, state)
+
+        # Episode accounting on the collected (T, B) batch, honoring the
+        # episode budget in completion order (scan over time).
+        def body(carry, tb):
+            ep_ret, ep_len, tot_ret, tot_len, count = carry
+            reward, done = tb
+            d = done.astype(F32)
+            ep_ret = ep_ret + reward
+            ep_len = ep_len + 1
+            if self.max_episodes is None:
+                room = jnp.inf
+            else:
+                room = self.max_episodes - count
+            # count at most ``room`` completions this step (env order)
+            take = jnp.cumsum(d) <= room
+            counted = d * take.astype(F32)
+            tot_ret = tot_ret + jnp.sum(counted * ep_ret)
+            tot_len = tot_len + jnp.sum(counted * ep_len)
+            count = count + jnp.sum(counted).astype(jnp.int32)
+            ep_ret = ep_ret * (1.0 - d)
+            ep_len = ep_len * (1.0 - d)
+            return (ep_ret, ep_len, tot_ret, tot_len, count), None
+
+        B = self.n_envs
+        init = (jnp.zeros((B,), F32), jnp.zeros((B,), F32),
+                jnp.zeros((), F32), jnp.zeros((), F32),
+                jnp.zeros((), jnp.int32))
+        (ep_ret, ep_len, tot_ret, tot_len, count), _ = jax.lax.scan(
+            body, init, (batch.reward, batch.done.astype(F32)))
+        # If NO episode finished inside the step budget (a strong policy can
+        # outlive max_steps), fall back to the budget-truncated returns so
+        # the metric reflects "at least this good" instead of reading 0;
+        # ``episodes == 0`` flags the truncation.
+        n = jnp.maximum(count, 1).astype(F32)
+        none_done = count == 0
+        avg_ret = jnp.where(none_done, jnp.mean(ep_ret), tot_ret / n)
+        avg_len = jnp.where(none_done, jnp.mean(ep_len), tot_len / n)
+        return {"avg_return": avg_ret, "avg_len": avg_len,
+                "episodes": count,
+                "steps": jnp.asarray(self.horizon * B, jnp.int32)}
+
+    def run(self, params, rng) -> dict:
+        """Evaluate ``params``; returns scalar metrics (device arrays)."""
+        return self._run(params, rng)

@@ -6,6 +6,14 @@ axis gives each device its own env shard stepping locally, with action
 selection per shard (Parallel-CPU analogue: model replicated, envs local).
 Collectives appear only for the psum'd trajectory stats — mirroring
 "synchronization across workers only per sampling batch" (paper §2.1).
+
+Two entry points:
+- ``collect``       — standalone shard_map'd rollout returning the global
+                      (T, B) batch; what non-mesh runners call.
+- ``local_collect`` — the shard-local body, for callers that are ALREADY
+                      inside a ``shard_map`` over ``self.axis`` (the SPMD
+                      TrainLoop fuses it with insert/sample/update so the
+                      whole log window is one sharded program).
 """
 from __future__ import annotations
 
@@ -45,7 +53,10 @@ class ShardedSampler:
     def init(self, rng, agent_state_kwargs=None) -> SamplerState:
         return self._global.init(rng, agent_state_kwargs)
 
-    def _state_spec(self, state: SamplerState):
+    def state_spec(self, state: SamplerState) -> SamplerState:
+        """PartitionSpec tree for the GLOBAL state: per-env leaves sharded
+        over ``axis``, rng + psum'd episode scalars replicated.  This is the
+        in/out spec any enclosing shard_map must use for the sampler state."""
         fields = {}
         for name in SamplerState._fields:
             leaf_tree = getattr(state, name)
@@ -57,34 +68,47 @@ class ShardedSampler:
                     else P(), leaf_tree)
         return SamplerState(**fields)
 
+    # kept for callers of the original private name
+    _state_spec = state_spec
+
+    def local_collect(self, params, state: SamplerState):
+        """Shard-local rollout; MUST run inside shard_map over ``self.axis``.
+
+        ``state`` is the local block of a state partitioned by
+        ``state_spec``: per-env leaves are the shard's slice, rng and episode
+        scalars replicated.  Shards decorrelate by folding the axis index
+        into the replicated key; episode stats are psum'd back to replicated
+        so ``traj_stats``/``reset_stats`` behave exactly as in serial.
+        Returns (local state', local (T, B/n_shards) batch).
+        """
+        axis = self.axis
+        my = jax.random.fold_in(state.rng, jax.lax.axis_index(axis))
+        nxt = jax.random.fold_in(state.rng, 0x5EED)
+        s2, batch = self._local.collect(params, state._replace(rng=my))
+        s2 = s2._replace(
+            rng=nxt,
+            completed_return_sum=jax.lax.psum(
+                s2.completed_return_sum - state.completed_return_sum, axis)
+            + state.completed_return_sum,
+            completed_len_sum=jax.lax.psum(
+                s2.completed_len_sum - state.completed_len_sum, axis)
+            + state.completed_len_sum,
+            completed_count=jax.lax.psum(
+                s2.completed_count - state.completed_count, axis)
+            + state.completed_count,
+        )
+        return s2, batch
+
+    def local_bootstrap(self, params, state: SamplerState):
+        """Shard-local bootstrap values (B/n_shards,); shard_map context only."""
+        return self._local.bootstrap_value(params, state)
+
     def collect(self, params, state: SamplerState):
         axis = self.axis
-        local = self._local
-
-        def shard_collect(params, state):
-            # decorrelate shards; keep the carried key replicated
-            my = jax.random.fold_in(state.rng, jax.lax.axis_index(axis))
-            nxt = jax.random.fold_in(state.rng, 0x5EED)
-            s2, batch = local.collect(params, state._replace(rng=my))
-            # global episode stats (replicated outputs)
-            s2 = s2._replace(
-                rng=nxt,
-                completed_return_sum=jax.lax.psum(
-                    s2.completed_return_sum - state.completed_return_sum, axis)
-                + state.completed_return_sum,
-                completed_len_sum=jax.lax.psum(
-                    s2.completed_len_sum - state.completed_len_sum, axis)
-                + state.completed_len_sum,
-                completed_count=jax.lax.psum(
-                    s2.completed_count - state.completed_count, axis)
-                + state.completed_count,
-            )
-            return s2, batch
-
-        state_spec = self._state_spec(state)
+        state_spec = self.state_spec(state)
         params_spec = jax.tree_util.tree_map(lambda _: P(), params)
         out_shapes = jax.eval_shape(
-            lambda p, s: local.collect(p, s._replace(rng=s.rng)), params,
+            lambda p, s: self._local.collect(p, s._replace(rng=s.rng)), params,
             jax.tree_util.tree_map(
                 lambda l, sp: l if sp == P() or not hasattr(l, "shape")
                 else jax.ShapeDtypeStruct((l.shape[0] // self.n_shards,) + l.shape[1:],
@@ -93,7 +117,7 @@ class ShardedSampler:
         batch_spec = jax.tree_util.tree_map(
             lambda l: P(None, axis) if l.ndim >= 2 else P(None), out_shapes[1])
 
-        f = shard_map(shard_collect, mesh=self.mesh,
+        f = shard_map(self.local_collect, mesh=self.mesh,
                       in_specs=(params_spec, state_spec),
                       out_specs=(state_spec, batch_spec),
                       check_rep=False)

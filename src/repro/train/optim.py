@@ -136,6 +136,28 @@ def sgd(lr, momentum: float = 0.0, grad_clip: Optional[float] = None) -> Optimiz
     return Optimizer(init, update)
 
 
+def cross_replica(opt: Optimizer, axis: str) -> Optimizer:
+    """Data-parallel wrapper: pmean grads over ``axis`` before the inner
+    update (paper §2.4 synchronous multi-GPU — "gradients all-reduced").
+
+    Because every loss in the repo is a mean over its (shard-local) batch,
+    pmean of per-shard grads equals the gradient of the global-batch mean,
+    so the wrapped update — run replicated inside ``shard_map`` — is the
+    SAME update the serial loop takes on the full batch.  Clipping and the
+    reported grad norm see the reduced grads, matching serial semantics.
+    Idempotent: wrapping twice over the same axis is a no-op.
+    """
+    if getattr(opt.update, "_cross_replica_axis", None) == axis:
+        return opt
+
+    def update(grads, state, params):
+        grads = jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis), grads)
+        return opt.update(grads, state, params)
+
+    update._cross_replica_axis = axis
+    return Optimizer(opt.init, update)
+
+
 def soft_update(target, online, tau: float):
     """Polyak averaging for target networks (DDPG/TD3/SAC)."""
     return jax.tree_util.tree_map(
