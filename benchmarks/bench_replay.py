@@ -1,8 +1,12 @@
 """Replay machinery throughput (the paper's buffer options §1.1): host
 sum-tree sampling, device-functional replay, and the blocked-priority kernel
-vs the numpy tree."""
+vs the numpy tree.  The prioritized-sample scaling rows (descent vs blocked
+kernel at 2^14/2^17/2^20) are merged into benchmarks/BENCH_samplers.json so
+the perf trajectory has a replay datapoint."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
@@ -11,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.replay.sum_tree import SumTree
 from repro.replay import device as dreplay
+from repro.kernels import registry
 from repro.kernels.sum_tree import init_priorities, set_priorities
 from repro.kernels.sum_tree.sum_tree import sample_pallas
 
@@ -66,4 +71,50 @@ def run():
     us = _timeit(lambda: smp(state, k))
     rows.append({"name": "device_replay_sample_256_prioritized",
                  "us_per_call": round(us, 1), "derived": ""})
+
+    rows.extend(_scaling_rows())
+    _merge_json([r for r in rows if "tree_sample" in r["name"]])
     return rows
+
+
+def _scaling_rows(batch: int = 256):
+    """Prioritized tree_sample, descent vs blocked kernel, at growing
+    capacities — the CPU-measurable side of the sum_tree roofline gate
+    (both paths are jax ops under jit; the blocked rows run the Pallas
+    kernel program in interpret mode)."""
+    rows = []
+    for cap in (2**14, 2**17, 2**20):
+        size = 1
+        while size < cap:
+            size *= 2
+        pr = jnp.asarray(np.random.default_rng(0).random(size) + 0.01,
+                         jnp.float32)
+        tree = dreplay.tree_set(jnp.zeros((2 * size,), jnp.float32),
+                                jnp.arange(size), pr)
+        k = jax.random.PRNGKey(1)
+        for spec in ("ref", "interpret"):
+            with registry.override(spec):
+                f = jax.jit(lambda t, k: dreplay.tree_sample(t, k, batch)[0])
+                us = _timeit(lambda: f(tree, k))
+            kind = "descent" if spec == "ref" else "blocked"
+            rows.append({"name": f"device_tree_sample_{kind}_{cap}x{batch}",
+                         "us_per_call": round(us, 1),
+                         "derived": f"{batch / us * 1e6:.0f}_samples_per_sec"})
+    return rows
+
+
+def _merge_json(rows, path=None):
+    """Merge (not overwrite) rows into BENCH_samplers.json — bench_samplers
+    owns the file and rewrites its own keys; these rows ride along."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_samplers.json")
+    out = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            out = json.load(fh)
+    for r in rows:
+        out[r["name"]] = {"us_per_call": r["us_per_call"],
+                          "derived": r["derived"]}
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")

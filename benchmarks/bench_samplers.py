@@ -109,8 +109,12 @@ def _sharded_rows(n_devices: int = 0):
 def _write_json(rows, path=None):
     path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                 "BENCH_samplers.json")
-    out = {r["name"]: {"us_per_call": r["us_per_call"],
-                       "derived": r["derived"]} for r in rows}
+    out = {}
+    if os.path.exists(path):  # merge: bench_replay's tree_sample rows ride along
+        with open(path) as f:
+            out = json.load(f)
+    out.update({r["name"]: {"us_per_call": r["us_per_call"],
+                            "derived": r["derived"]} for r in rows})
     with open(path, "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")

@@ -11,7 +11,9 @@ GQA maps query head h to KV head h // (H // Hkv) in the BlockSpec index_map,
 so repeated KV heads are never materialized.
 
 Supports: causal masking with a query position offset (decode appends),
-sliding-window attention (mixtral/gemma2-local), logit softcap (gemma2).
+sliding-window attention (mixtral/gemma2-local), logit softcap (gemma2),
+and a per-sequence ``kv_len`` valid-length mask (KV-cache decode: slots
+``>= kv_len[b]`` are unwritten and masked out).
 """
 from __future__ import annotations
 
@@ -28,9 +30,13 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
-def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-                 scale, causal, window, softcap, block_q, block_k,
-                 n_kblocks, q_offset):
+def _attn_kernel(*refs, scale, causal, window, softcap, block_q, block_k,
+                 n_kblocks, q_offset, has_kvlen):
+    if has_kvlen:
+        q_ref, k_ref, v_ref, kvl_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        kvl_ref = None
     iq = pl.program_id(2)
     ik = pl.program_id(3)
 
@@ -46,12 +52,15 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
 
     # skip fully-masked tiles (causal: tile entirely in the future;
-    # window: tile entirely before the window)
+    # window: tile entirely before the window; kv_len: tile entirely past
+    # the sequence's valid cache slots — a traced predicate is fine here)
     run = jnp.asarray(True)
     if causal:
         run &= k_start <= q_start + block_q - 1
     if window is not None:
         run &= k_start + block_k - 1 > q_start - window
+    if kvl_ref is not None:
+        run &= k_start < kvl_ref[0]
 
     @pl.when(run)
     def _tile():
@@ -67,6 +76,8 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             mask &= kpos <= qpos
         if window is not None:
             mask &= kpos > qpos - window
+        if kvl_ref is not None:
+            mask &= kpos < kvl_ref[0]
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scr[...]
@@ -89,9 +100,12 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            window: Optional[int] = None,
                            softcap: Optional[float] = None,
                            q_offset: int = 0,
+                           kv_len=None,
                            block_q: int = 128, block_k: int = 128,
                            interpret: bool = True):
-    """q: (B, T, H, dh); k, v: (B, S, Hkv, dh) -> (B, T, H, dh)."""
+    """q: (B, T, H, dh); k, v: (B, S, Hkv, dh) -> (B, T, H, dh).
+    kv_len: optional (B,) int32 — KV slots >= kv_len[b] are masked out
+    (decode against a partially-filled cache)."""
     B, T, H, dh = q.shape
     S, Hkv = k.shape[1], k.shape[2]
     G = H // Hkv
@@ -105,19 +119,25 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal, window=window,
         softcap=softcap, block_q=block_q, block_k=block_k,
-        n_kblocks=n_kblocks, q_offset=q_offset)
+        n_kblocks=n_kblocks, q_offset=q_offset, has_kvlen=kv_len is not None)
+
+    in_specs = [
+        pl.BlockSpec((1, block_q, 1, dh),
+                     lambda b, h, iq, ik: (b, iq, h, 0)),
+        pl.BlockSpec((1, block_k, 1, dh),
+                     lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, dh),
+                     lambda b, h, iq, ik: (b, ik, h // G, 0)),
+    ]
+    args = [q, k, v]
+    if kv_len is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda b, h, iq, ik: (b,)))
+        args.append(kv_len.astype(jnp.int32))
 
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, block_q, 1, dh),
-                         lambda b, h, iq, ik: (b, iq, h, 0)),
-            pl.BlockSpec((1, block_k, 1, dh),
-                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
-            pl.BlockSpec((1, block_k, 1, dh),
-                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, block_q, 1, dh),
                                lambda b, h, iq, ik: (b, iq, h, 0)),
         out_shape=jax.ShapeDtypeStruct((B, T, H, dh), q.dtype),
@@ -128,4 +148,4 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((block_q, dh), F32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)

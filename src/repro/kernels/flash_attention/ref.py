@@ -14,9 +14,11 @@ F32 = jnp.float32
 def attention_reference(q, k, v, *, causal: bool = True,
                         window: Optional[int] = None,
                         softcap: Optional[float] = None,
-                        q_offset: int = 0):
+                        q_offset: int = 0,
+                        kv_len=None):
     """q: (B, T, H, dh); k, v: (B, S, Hkv, dh).  Positions are absolute:
-    q token i sits at q_offset + i; k token j at j.  Returns (B, T, H, dh)
+    q token i sits at q_offset + i; k token j at j.  kv_len: optional (B,)
+    valid-length mask (slots >= kv_len[b] ignored).  Returns (B, T, H, dh)
     in q.dtype, softmax in f32."""
     B, T, H, dh = q.shape
     S, Hkv = k.shape[1], k.shape[2]
@@ -28,12 +30,14 @@ def attention_reference(q, k, v, *, causal: bool = True,
         scores = jnp.tanh(scores / softcap) * softcap
     qpos = q_offset + jnp.arange(T)
     kpos = jnp.arange(S)
-    mask = jnp.ones((T, S), bool)
+    mask = jnp.ones((B, T, S), bool)
     if causal:
-        mask &= kpos[None, :] <= qpos[:, None]
+        mask &= (kpos[None, :] <= qpos[:, None])[None]
     if window is not None:
-        mask &= kpos[None, :] > qpos[:, None] - window
-    scores = jnp.where(mask[None, None, None], scores, -1e30)
+        mask &= (kpos[None, :] > qpos[:, None] - window)[None]
+    if kv_len is not None:
+        mask &= kpos[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask[:, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqs,bshd->bqhgd", probs, v.astype(F32))
     return out.reshape(B, T, H, dh).astype(q.dtype)

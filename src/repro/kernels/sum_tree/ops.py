@@ -1,15 +1,41 @@
-"""Functional blocked-priority state + jit'd wrappers around the kernel."""
+"""Functional blocked-priority state + public wrappers around the kernel.
+
+Two API surfaces:
+
+- ``BlockedPriorities`` / ``set_priorities`` / ``sample_proportional`` — the
+  standalone blocked layout (kernel tests and benches).
+- ``tree_update_blocked`` / ``tree_sample_blocked`` — the same math operating
+  directly on ``replay/device.py``'s ``(2*size,)`` binary sum tree.  Key
+  layout fact: for ``n_blocks = size // block_size`` (both powers of two),
+  the tree's internal level at indices ``[n_blocks, 2*n_blocks)`` IS the
+  per-block sums — no second data structure, the DeviceReplay state is
+  reinterpreted in place, and either backend can consume a tree the other
+  produced.
+
+``interpret`` defaults derive from the kernel registry (None -> interpret
+everywhere except a resolved ``pallas`` backend); resolution happens in
+non-jitted wrappers so flipping backends never reuses a stale trace.
+"""
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import registry
 from .sum_tree import sample_pallas
 
 F32 = jnp.float32
+
+
+def _block_b(batch: int) -> int:
+    """Largest divisor of ``batch`` that fits the kernel's per-step tile."""
+    bb = min(256, batch)
+    while batch % bb:
+        bb -= 1
+    return bb
 
 
 class BlockedPriorities(NamedTuple):
@@ -26,7 +52,6 @@ def init_priorities(capacity: int, block_size: int = 512) -> BlockedPriorities:
 
 @jax.jit
 def set_priorities(state: BlockedPriorities, idx, priorities) -> BlockedPriorities:
-    bs = state.leaves.shape[1]
     flat = state.leaves.reshape(-1).at[idx].set(priorities.astype(F32))
     leaves = flat.reshape(state.leaves.shape)
     return BlockedPriorities(leaves=leaves, block_sums=jnp.sum(leaves, axis=1))
@@ -37,10 +62,54 @@ def total(state: BlockedPriorities):
 
 
 @functools.partial(jax.jit, static_argnames=("batch", "interpret"))
-def sample_proportional(state: BlockedPriorities, rng, batch: int,
-                        interpret: bool = True):
-    """Stratified proportional sampling; returns (idx, prob)."""
+def _sample_proportional_impl(state, rng, batch, interpret):
     tot = total(state)
     u = (jnp.arange(batch) + jax.random.uniform(rng, (batch,))) / batch * tot
     return sample_pallas(state.leaves, state.block_sums, u,
-                         block_b=min(256, batch), interpret=interpret)
+                         block_b=_block_b(batch), interpret=interpret)
+
+
+def sample_proportional(state: BlockedPriorities, rng, batch: int,
+                        interpret: Optional[bool] = None):
+    """Stratified proportional sampling; returns (idx, prob)."""
+    interpret = registry.resolve_interpret("sum_tree", interpret)
+    return _sample_proportional_impl(state, rng, batch, interpret)
+
+
+# ---------------------------------------------------------------------------
+# DeviceReplay (2*size,) sum-tree layout
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def tree_update_blocked(tree: jnp.ndarray, idx, priorities) -> jnp.ndarray:
+    """Blocked equivalent of the pointer-walk ``tree_set``: scatter the
+    leaves, then rebuild every internal level bottom-up with vectorized
+    pairwise sums (log2(size) reshape-sums, no dynamic ancestor indexing).
+    Each parent is the same ``left + right`` the walk computes, so untouched
+    nodes reproduce their stored values bit-for-bit."""
+    size = tree.shape[0] // 2
+    leaves = tree[size:].at[idx].set(priorities.astype(tree.dtype))
+    levels = [leaves]
+    while levels[-1].shape[0] > 1:
+        levels.append(levels[-1].reshape(-1, 2).sum(axis=1))
+    # layout: [unused_0, root, level2 (2,), ..., leaves (size,)]
+    return jnp.concatenate([tree[:1]] + levels[::-1])
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def _tree_sample_blocked_impl(tree, u, block_size, interpret):
+    size = tree.shape[0] // 2
+    bs = min(block_size, size)
+    n_blocks = size // bs
+    leaves = tree[size:].reshape(n_blocks, bs)
+    bsums = tree[n_blocks:2 * n_blocks]
+    return sample_pallas(leaves, bsums, u.astype(F32),
+                         block_b=_block_b(u.shape[0]), interpret=interpret)
+
+
+def tree_sample_blocked(tree: jnp.ndarray, u, *, block_size: int = 512,
+                        interpret: Optional[bool] = None):
+    """Proportional sampling over a ``(2*size,)`` sum tree via the blocked
+    kernel.  u: (batch,) f32 in [0, total).  Returns (leaf_idx i32, prob)."""
+    interpret = registry.resolve_interpret("sum_tree", interpret)
+    return _tree_sample_blocked_impl(tree, u, block_size, interpret)

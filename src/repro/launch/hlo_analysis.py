@@ -93,6 +93,20 @@ def collective_bytes(hlo_text: str) -> Dict[str, float]:
     return out
 
 
+def xla_cost(fn, *args, **kwargs) -> Dict[str, float]:
+    """FLOPs / bytes-accessed of ``fn`` jit-compiled at these args — the XLA
+    baseline side of the kernel roofline gate (benchmarks/bench_kernels.py).
+    Works on CPU: cost_analysis reflects the optimized HLO of whatever
+    backend compiles it, which is what the pure-jnp reference would run."""
+    import jax
+
+    c = jax.jit(fn).lower(*args, **kwargs).compile().cost_analysis()
+    if isinstance(c, (list, tuple)):
+        c = c[0] if c else {}
+    return {"flops": float(c.get("flops", 0.0)),
+            "bytes accessed": float(c.get("bytes accessed", 0.0))}
+
+
 def roofline_terms(cost: dict, coll: dict, n_chips: int, *,
                    peak_flops=197e12, hbm_bw=819e9, link_bw=50e9) -> dict:
     """Three roofline terms in seconds (per the assignment formulas)."""

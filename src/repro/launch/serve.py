@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke_config
 from ..models import backbones as bb
+from ..kernels import registry as kernel_registry
 
 F32 = jnp.float32
 
@@ -64,8 +65,15 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kernels", default=None,
+                    help="kernel backend spec (REPRO_KERNELS syntax: 'ref', "
+                         "'interpret', 'attention=pallas', ...); installed "
+                         "before the generate program is traced")
     args = ap.parse_args(argv)
 
+    if args.kernels:
+        kernel_registry.set_env(args.kernels)
+    print(f"kernel backends: {kernel_registry.describe()}")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     rng = jax.random.PRNGKey(args.seed)
     k_init, rng = jax.random.split(rng)

@@ -29,6 +29,7 @@ from ..algos.pg.ppo import make_lm_ppo_train_step
 from ..train.optim import adam
 from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from ..utils.logger import Logger
+from ..kernels import registry as kernel_registry
 
 F32 = jnp.float32
 
@@ -87,8 +88,15 @@ def main(argv=None):
                     help="compile this many (rollout + update) steps into ONE "
                          "lax.scan program (the runners' TrainLoop fusion); "
                          "logs/checkpoints land on window boundaries")
+    ap.add_argument("--kernels", default=None,
+                    help="kernel backend spec (REPRO_KERNELS syntax: 'ref', "
+                         "'interpret', 'attention=pallas,ssd=ref', ...); "
+                         "installed before any program is traced")
     args = ap.parse_args(argv)
 
+    if args.kernels:
+        kernel_registry.set_env(args.kernels)
+    print(f"kernel backends: {kernel_registry.describe()}")
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     env = make_token_lm(vocab=cfg.vocab, episode_len=args.horizon)
     logger = Logger(args.log_dir)

@@ -311,7 +311,10 @@ def forward_train(params, tokens, cfg: ModelConfig, *, img=None, enc_frames=None
     B, T = tokens.shape
     x = embed(params, tokens, cfg)
     x = constrain_res(x, cfg)
-    positions = jnp.arange(T)
+    # positions=None means "contiguous from 0" (attention_train fills in
+    # arange(T)) — and marks the call site eligible for the flash-attention
+    # kernel dispatch, which only handles the contiguous causal layout.
+    positions = None
     enc_out = None
     if cfg.family == "encdec":
         enc_out = encoder_forward(params, enc_frames, cfg)
@@ -648,7 +651,7 @@ def prefill(params, tokens, cfg: ModelConfig, cache, *, img=None, enc_frames=Non
     B, T = tokens.shape
     x = embed(params, tokens, cfg)
     x = constrain_res(x, cfg)
-    positions = jnp.arange(T)
+    positions = None  # contiguous-from-0: kernel-dispatch eligible (see forward_train)
     f = cfg.family
     new_cache = dict(cache)
     enc_out = None

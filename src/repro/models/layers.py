@@ -25,6 +25,8 @@ from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig
 from . import sharding as shd
+from ..kernels import registry as kernel_registry
+from ..kernels.flash_attention.ops import flash_attention, flash_attention_decode
 
 F32 = jnp.float32
 
@@ -188,6 +190,11 @@ def attention_train(params, x, cfg: ModelConfig, *, positions=None, causal=True,
     src = x if x_kv is None else x_kv
     k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
     v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+    # Kernel dispatch (trace-time): the flash kernel covers the common
+    # train/prefill shape — causal self-attention over contiguous positions
+    # from 0 (positions=None).  Cross-attention, explicit positions, and the
+    # repeat-KV tensor-parallel layout stay on the chunked-jnp path.
+    contiguous = positions is None
     if positions is None:
         positions = jnp.arange(T)
     if x_kv is None:
@@ -212,13 +219,20 @@ def attention_train(params, x, cfg: ModelConfig, *, positions=None, causal=True,
         vr = shd.constrain(jnp.repeat(v, H // Hkv, axis=2), head_spec)
     else:
         kr, vr = k, v
-    out = multihead_attention(
-        q, kr, vr,
-        q_positions=positions, k_positions=kv_pos,
-        causal=(causal and not cross), window=window,
-        softcap=cfg.softcap_attn, chunk_q=cfg.attn_chunk_q,
-        unroll=cfg.unroll,
-    )
+    use_kernel = (kernel_registry.backend_for("attention") != "ref"
+                  and contiguous and causal and not cross and not repeat_kv
+                  and not cfg.unroll)
+    if use_kernel:
+        out = flash_attention(q, kr, vr, causal=True, window=window,
+                              softcap=cfg.softcap_attn)
+    else:
+        out = multihead_attention(
+            q, kr, vr,
+            q_positions=positions, k_positions=kv_pos,
+            causal=(causal and not cross), window=window,
+            softcap=cfg.softcap_attn, chunk_q=cfg.attn_chunk_q,
+            unroll=cfg.unroll,
+        )
     y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
     return y, (k, v)
 
@@ -245,17 +259,25 @@ def attention_decode(params, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
 
     H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     G = H // Hkv
-    qg = q.reshape(B, 1, Hkv, G, dh)
-    scale = 1.0 / math.sqrt(dh)
-    sidx = jnp.arange(S)[None, :]  # (1,S)
+    # Both cache layouts reduce to a pure valid-length mask: slots 0..len are
+    # written (dense), or the whole rolling buffer once warm — slot order in
+    # the ring carries no positional meaning, so no causal test is needed.
     if window is None:
-        valid = sidx <= lengths[:, None]  # slots 0..len written (incl. new)
+        kv_len = lengths + 1
     else:
-        valid = sidx[None] >= 0  # rolling: all slots valid once warm
-        valid = (sidx < jnp.minimum(lengths[:, None] + 1, S))
-    mask = valid[:, None, None, None, :]
-    out = _attend_block(qg, new_k.astype(dt), new_v.astype(dt), mask, cfg.softcap_attn, scale)
-    y = jnp.einsum("bthk,hkd->btd", out.reshape(B, 1, H, dh), params["wo"].astype(dt))
+        kv_len = jnp.minimum(lengths + 1, S)
+    if kernel_registry.backend_for("attention") != "ref":
+        out = flash_attention_decode(q, new_k.astype(dt), new_v.astype(dt),
+                                     kv_len, softcap=cfg.softcap_attn)
+        out = out.reshape(B, 1, H, dh)
+    else:
+        qg = q.reshape(B, 1, Hkv, G, dh)
+        scale = 1.0 / math.sqrt(dh)
+        sidx = jnp.arange(S)[None, :]  # (1,S)
+        mask = (sidx < kv_len[:, None])[:, None, None, None, :]
+        out = _attend_block(qg, new_k.astype(dt), new_v.astype(dt), mask,
+                            cfg.softcap_attn, scale).reshape(B, 1, H, dh)
+    y = jnp.einsum("bthk,hkd->btd", out, params["wo"].astype(dt))
     return y, new_k, new_v
 
 
@@ -519,8 +541,19 @@ def ssd_block_train(params, u, cfg: ModelConfig, conv_state=None, ssm_state=None
     Cs = xBC[..., H * Pd + G * N:].reshape(B_, T, G, N)
     dt = jax.nn.softplus(dt.astype(F32) + params["dt_bias"])
     A = -jnp.exp(params["A_log"])
-    y, ssm_state = ssd_chunked(x, dt, A, Bs, Cs, cfg.ssd_chunk, ssm_state,
-                               unroll=cfg.unroll, intra_bf16=cfg.ssd_bf16)
+    # Kernel dispatch (trace-time): the SSD kernel covers the zero-initial-
+    # state train/prefill shape in f32.  Chunked-prefill continuation
+    # (ssm_state), the dry-run unroll variants, and the bf16-intra knob
+    # (a ref-path traffic optimization the kernel subsumes) stay on jnp.
+    if (kernel_registry.backend_for("ssd") != "ref" and ssm_state is None
+            and not cfg.unroll and not cfg.ssd_bf16):
+        from ..kernels.ssd_scan.ops import ssd_scan as _ssd_scan_op
+
+        y, ssm_state = _ssd_scan_op(x, dt, A, Bs, Cs,
+                                    chunk=min(cfg.ssd_chunk, T))
+    else:
+        y, ssm_state = ssd_chunked(x, dt, A, Bs, Cs, cfg.ssd_chunk, ssm_state,
+                                   unroll=cfg.unroll, intra_bf16=cfg.ssd_bf16)
     y = y.reshape(B_, T, H * Pd) * jax.nn.silu(z.reshape(B_, T, H * Pd))
     y = rmsnorm({"scale": params["norm_scale"]}, y)
     return jnp.einsum("bthp,hpd->btd", y.reshape(B_, T, H, Pd), params["out_proj"].astype(u.dtype)), (conv_state, ssm_state)

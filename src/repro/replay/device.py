@@ -21,6 +21,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels import registry as kernel_registry
+
 
 class ReplayState(NamedTuple):
     storage: Any          # leaves (N, ...) flat slot-major
@@ -73,7 +75,15 @@ def insert(state: ReplayState, batch, priorities=None) -> ReplayState:
 # ---------------------------------------------------------------------------
 
 def tree_set(tree: jnp.ndarray, idx: jnp.ndarray, priorities: jnp.ndarray):
-    """Functional leaf update + upward propagation (fixed depth)."""
+    """Functional leaf update + upward propagation (fixed depth).
+
+    Kernel dispatch (trace-time): the blocked backend scatters the leaves and
+    rebuilds all levels bottom-up with vectorized pairwise sums — same values
+    (each parent is left + right either way), no dynamic ancestor gathers."""
+    if kernel_registry.backend_for("sum_tree") != "ref":
+        from ..kernels.sum_tree.ops import tree_update_blocked
+
+        return tree_update_blocked(tree, idx, priorities)
     size = tree.shape[0] // 2
     node = idx + size
     tree = tree.at[node].set(priorities.astype(tree.dtype))
@@ -88,11 +98,21 @@ def tree_set(tree: jnp.ndarray, idx: jnp.ndarray, priorities: jnp.ndarray):
 
 
 def tree_sample(tree: jnp.ndarray, rng, batch: int):
-    """Stratified proportional sampling; returns (idx, prob)."""
+    """Stratified proportional sampling; returns (idx, prob).
+
+    Kernel dispatch (trace-time): the blocked backend reinterprets the tree's
+    ``[n_blocks, 2*n_blocks)`` level as per-block sums and resolves every
+    sample with two dense cumsum/compare passes (kernels/sum_tree) instead of
+    the O(log n) pointer-chasing descent.  Both pick the smallest leaf with
+    cumsum > u, so zero-priority runs and boundary ties agree."""
     size = tree.shape[0] // 2
-    depth = size.bit_length() - 1
     total = tree[1]
     u = (jnp.arange(batch) + jax.random.uniform(rng, (batch,))) / batch * total
+    if kernel_registry.backend_for("sum_tree") != "ref":
+        from ..kernels.sum_tree.ops import tree_sample_blocked
+
+        return tree_sample_blocked(tree, u)
+    depth = size.bit_length() - 1
     node = jnp.ones((batch,), jnp.int32)
     for _ in range(depth):
         left = 2 * node
