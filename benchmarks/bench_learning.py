@@ -56,7 +56,7 @@ def _bench_dispatch(rows, *, window=20, reps=5):
         t0 = time.perf_counter()
         ts2, ss2, rs2 = out[:3]
         for _ in range(reps):
-            ts2, ss2, rs2, infos = loop.run_window(ts2, ss2, rs2, keys)
+            ts2, ss2, rs2, infos, _ = loop.run_window(ts2, ss2, rs2, keys)
         jax.block_until_ready(infos.loss)
         dt = time.perf_counter() - t0
         sps = steps_per_iter * window * reps / dt

@@ -67,7 +67,7 @@ def time_loop(name, sampler, mesh):
     t0 = time.perf_counter()
     iters = 5
     for _ in range(iters):
-        ts2, ss2, _, _ = loop.run_window(ts, ss, None, keys)
+        ts2, ss2, _, _, _ = loop.run_window(ts, ss, None, keys)
     jax.block_until_ready(ts2.params)
     dt = (time.perf_counter() - t0) / iters
     sps = N_ENVS * HORIZON * WINDOW / dt

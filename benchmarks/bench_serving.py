@@ -1,16 +1,18 @@
 """Batched action-selection / decode throughput (paper Fig 1 center/right at
 LM scale): tokens/sec for prefill+decode on smoke backbones — one row per
-family exercising every cache type."""
+family exercising every cache type.
+
+Uses the SAME phase split and metric schema as ``repro.launch.serve``
+(:func:`timed_generate`): prefill_tok_per_sec / decode_tok_per_sec /
+decode_step_ms, so a bench row and a serving-telemetry JSONL line are
+directly comparable."""
 from __future__ import annotations
 
-import time
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_smoke_config
 from repro.models import backbones as bb
-from repro.launch.serve import make_generate
+from repro.launch.serve import make_phases, timed_generate
 
 
 def run():
@@ -21,16 +23,22 @@ def run():
         cfg = get_smoke_config(arch)
         params = bb.init_lm(rng, cfg)
         B, P, G = 8, 32, 16
-        gen = make_generate(cfg, B, P, G)
+        prefill, decode = make_phases(cfg, B, P, G)
         prompts = jax.random.randint(rng, (B, P), 0, cfg.vocab)
-        toks = gen(params, prompts, rng)
+        # compile both phases, then time 3 rounds through the shared helper
+        toks, _ = timed_generate(prefill, decode, params, prompts, rng,
+                                 batch=B, prompt_len=P, gen=G)
         jax.block_until_ready(toks)
-        t0 = time.perf_counter()
-        for _ in range(3):
-            toks = gen(params, prompts, rng)
-        jax.block_until_ready(toks)
-        us = (time.perf_counter() - t0) / 3 * 1e6
+        acc = None
+        reps = 3
+        for _ in range(reps):
+            _, m = timed_generate(prefill, decode, params, prompts, rng,
+                                  batch=B, prompt_len=P, gen=G)
+            acc = m if acc is None else {k: acc[k] + m[k] for k in m}
+        m = {k: v / reps for k, v in acc.items()}
         rows.append({"name": f"decode_{arch}_B{B}x{G}",
-                     "us_per_call": round(us, 1),
-                     "derived": f"{B*G/us*1e6:.0f}_tok_per_sec_smoke_cpu"})
+                     "us_per_call": round(m["latency_s"] * 1e6, 1),
+                     "derived": (f"{m['decode_tok_per_sec']:.0f}_decode_tok_s_"
+                                 f"{m['prefill_tok_per_sec']:.0f}_prefill_tok_s_"
+                                 f"{m['decode_step_ms']:.2f}_ms_per_step")})
     return rows

@@ -7,6 +7,7 @@
   LM serving (Fig 1 at LM scale) -> bench_serving
   §Perf GAE lowering       -> bench_gae
   Kernel roofline gate     -> bench_kernels (BENCH_kernels.json)
+  Sentinel overhead gate   -> bench_telemetry (BENCH_telemetry.json)
 
 Roofline terms come from the dry-run (benchmarks/dryrun_results/ via
 python -m repro.launch.dryrun), not from CPU wall time.
@@ -21,11 +22,11 @@ import traceback
 
 def main() -> None:
     from . import (bench_samplers, bench_replay, bench_gae, bench_serving,
-                   bench_learning, bench_r2d1, bench_kernels)
+                   bench_learning, bench_r2d1, bench_kernels, bench_telemetry)
     mods = [("samplers", bench_samplers), ("replay", bench_replay),
             ("gae", bench_gae), ("serving", bench_serving),
             ("learning", bench_learning), ("r2d1", bench_r2d1),
-            ("kernels", bench_kernels)]
+            ("kernels", bench_kernels), ("telemetry", bench_telemetry)]
     if len(sys.argv) > 1:
         only = set(sys.argv[1:])
         mods = [(n, m) for n, m in mods if n in only]

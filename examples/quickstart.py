@@ -5,8 +5,10 @@ The runner compiles each log window (collect -> update x log_interval) into
 ONE lax.scan program via the scan-fused TrainLoop; pass ``fuse=False`` to
 dispatch one program per iteration instead (see docs/architecture.md).
 
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py [log_dir]
 """
+import sys
+
 import jax
 
 from repro.envs import make_env
@@ -17,9 +19,10 @@ from repro.models.rl_models import make_pg_mlp
 from repro.samplers import EvalSampler, SerialSampler
 from repro.runners import OnPolicyRunner
 from repro.train.optim import adam
+from repro.utils.logger import Logger
 
 
-def main():
+def main(log_dir="logs/quickstart"):
     env = make_env("cartpole")
     model = make_pg_mlp(obs_dim=4, n_actions=2)
     agent = make_categorical_pg_agent(model)
@@ -30,12 +33,16 @@ def main():
     # reported as eval_* in every log row
     evaluator = EvalSampler(env, agent, n_envs=8, max_steps=2000,
                             max_episodes=8)
+    # sentinels ride the fused scan (telemetry/sentinels.py): grad/param/
+    # update norms, non-finite counts, env steps land as sent_* columns in
+    # progress.csv / progress.jsonl alongside the training stats
     runner = OnPolicyRunner(sampler, algo, n_iterations=50, log_interval=10,
-                            eval_sampler=evaluator)
+                            eval_sampler=evaluator, sentinels=True,
+                            logger=Logger(log_dir))
     train_state, sampler_state, _ = runner.run(jax.random.PRNGKey(0))
     print("final stats:", {k: float(v) for k, v in
                            sampler.traj_stats(sampler_state).items()})
 
 
 if __name__ == "__main__":
-    main()
+    main(*sys.argv[1:])

@@ -91,8 +91,13 @@ def _auto(op: str) -> str:
     return "ref"
 
 
-def backend_for(op: str) -> str:
-    """Resolved backend ('ref' | 'interpret' | 'pallas') for ``op``."""
+def backend_for(op: str, site: Optional[str] = None) -> str:
+    """Resolved backend ('ref' | 'interpret' | 'pallas') for ``op``.
+
+    ``site`` names the call site (e.g. ``"attention_train"``); when given,
+    the resolution is reported as a ``kernel_dispatch`` telemetry event —
+    resolution happens at TRACE time, so this records which backend each
+    compiled program actually baked in, once per trace, not per step."""
     if op not in OPS:
         raise ValueError(f"unknown kernel op {op!r} (ops: {OPS})")
     be = "auto"
@@ -104,6 +109,11 @@ def backend_for(op: str) -> str:
             be = layer[op]
     if be == "auto":
         be = _auto(op)
+    if site is not None:
+        from ..telemetry import trace
+
+        trace.emit("kernel_dispatch", f"{op}@{site}", op=op, site=site,
+                   backend=be)
     return be
 
 

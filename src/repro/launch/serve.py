@@ -1,12 +1,21 @@
 """Batched serving driver: prefill + decode loop over request batches — the
 paper's batched action selection as a standalone service (example app).
 
+Prefill and decode compile as SEPARATE programs so the service can report
+per-phase telemetry — prefill tokens/sec, decode tokens/sec, per-decode-step
+latency — through the same ``MetricsRegistry`` schema that
+``benchmarks/bench_serving.py`` (and the future continuous-batching loop)
+consume: see :func:`timed_generate`.  ``--log-dir`` lands those rows in
+console + JSONL; ``--profile[=DIR]`` captures a perfetto-loadable trace with
+the prefill/decode spans annotated.
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \
       --batch 8 --prompt-len 64 --gen 32
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -14,17 +23,28 @@ import jax.numpy as jnp
 
 from ..configs import get_config, get_smoke_config
 from ..models import backbones as bb
+from ..telemetry import trace
+from ..telemetry.metrics import MetricsRegistry
 from ..kernels import registry as kernel_registry
 
 F32 = jnp.float32
 
 
-def make_generate(cfg, batch: int, prompt_len: int, gen: int,
-                  temperature: float = 0.0):
+def make_phases(cfg, batch: int, prompt_len: int, gen: int,
+                temperature: float = 0.0):
+    """Jitted (prefill, decode) pair.
+
+    prefill(params, prompts, rng) -> (last_logits, cache)
+    decode(params, logits, cache, rng) -> (batch, gen) tokens
+
+    Two programs instead of one so the host can time (and profile-annotate)
+    each serving phase; the decode scan is unchanged, so per-step cost is
+    identical to the fully-fused generate.
+    """
     S = prompt_len + gen + 1
 
     @jax.jit
-    def generate(params, prompts, rng):
+    def prefill(params, prompts, rng):
         kw = {}
         if cfg.family == "vlm":
             kw["img"] = jnp.zeros((batch, cfg.n_img_tokens, cfg.d_model),
@@ -36,7 +56,10 @@ def make_generate(cfg, batch: int, prompt_len: int, gen: int,
                               enc_len=cfg.enc_len)
         hidden, cache = bb.prefill(params, prompts, cfg, cache, **kw)
         logits = bb.lm_logits(params, hidden, cfg)[:, -1].astype(F32)
+        return logits, cache
 
+    @jax.jit
+    def decode(params, logits, cache, rng):
         def step(carry, k):
             logits, cache = carry
             if temperature > 0:
@@ -47,11 +70,55 @@ def make_generate(cfg, batch: int, prompt_len: int, gen: int,
             nxt = bb.lm_logits(params, hidden, cfg)[:, 0].astype(F32)
             return (nxt, cache), tok
 
-        (_, cache), toks = jax.lax.scan(step, (logits, cache),
-                                        jax.random.split(rng, gen))
+        _, toks = jax.lax.scan(step, (logits, cache),
+                               jax.random.split(rng, gen))
         return jnp.swapaxes(toks, 0, 1)  # (batch, gen)
 
+    return prefill, decode
+
+
+def make_generate(cfg, batch: int, prompt_len: int, gen: int,
+                  temperature: float = 0.0):
+    """Composed prefill+decode (the original single-call generate API)."""
+    prefill, decode = make_phases(cfg, batch, prompt_len, gen, temperature)
+
+    def generate(params, prompts, rng):
+        logits, cache = prefill(params, prompts, rng)
+        return decode(params, logits, cache, rng)
+
     return generate
+
+
+def timed_generate(prefill, decode, params, prompts, rng, *,
+                   batch: int, prompt_len: int, gen: int):
+    """One serving round with per-phase timing.
+
+    Returns ``(tokens, metrics)`` where metrics is THE serving telemetry
+    schema — shared by the launch driver, bench_serving, and anything else
+    that reports decode throughput:
+
+    prefill_tok_per_sec, decode_tok_per_sec, decode_step_ms (per-step decode
+    latency across the batch), latency_s (whole round), total_tok_per_sec.
+    """
+    tracer = trace.get_tracer()
+    t0 = time.perf_counter()
+    with tracer.span("serve.prefill", tokens=batch * prompt_len):
+        logits, cache = prefill(params, prompts, rng)
+        jax.block_until_ready(logits)
+    t1 = time.perf_counter()
+    with tracer.span("serve.decode", tokens=batch * gen):
+        toks = decode(params, logits, cache, rng)
+        jax.block_until_ready(toks)
+    t2 = time.perf_counter()
+    prefill_s, decode_s = t1 - t0, t2 - t1
+    metrics = {
+        "prefill_tok_per_sec": batch * prompt_len / max(prefill_s, 1e-9),
+        "decode_tok_per_sec": batch * gen / max(decode_s, 1e-9),
+        "decode_step_ms": decode_s / max(gen, 1) * 1e3,
+        "latency_s": t2 - t0,
+        "total_tok_per_sec": batch * (prompt_len + gen) / max(t2 - t0, 1e-9),
+    }
+    return toks, metrics
 
 
 def main(argv=None):
@@ -65,11 +132,26 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-dir", default=None)
     ap.add_argument("--kernels", default=None,
                     help="kernel backend spec (REPRO_KERNELS syntax: 'ref', "
                          "'interpret', 'attention=pallas', ...); installed "
                          "before the generate program is traced")
+    ap.add_argument("--profile", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="capture a jax.profiler trace into DIR (default "
+                         "<log-dir>/profile)")
     args = ap.parse_args(argv)
+
+    tracer = trace.configure(os.path.join(args.log_dir, "trace.jsonl")
+                             if args.log_dir else None)
+    registry = MetricsRegistry(args.log_dir, sinks=("console", "jsonl"),
+                               jsonl_filename="serve.jsonl")
+    profile_dir = None
+    if args.profile is not None:
+        profile_dir = args.profile or os.path.join(args.log_dir or ".",
+                                                   "profile")
+        jax.profiler.start_trace(profile_dir)
 
     if args.kernels:
         kernel_registry.set_env(args.kernels)
@@ -78,19 +160,30 @@ def main(argv=None):
     rng = jax.random.PRNGKey(args.seed)
     k_init, rng = jax.random.split(rng)
     params = bb.init_lm(k_init, cfg)
-    generate = make_generate(cfg, args.batch, args.prompt_len, args.gen,
-                             args.temperature)
+    prefill, decode = make_phases(cfg, args.batch, args.prompt_len, args.gen,
+                                  args.temperature)
+    tracer.watch_jit("serve.prefill", prefill)
+    tracer.watch_jit("serve.decode", decode)
 
+    toks = None
     for r in range(args.rounds):
         rng, k1, k2 = jax.random.split(rng, 3)
         prompts = jax.random.randint(k1, (args.batch, args.prompt_len), 0,
                                      cfg.vocab)
-        t0 = time.time()
-        toks = jax.block_until_ready(generate(params, prompts, k2))
-        dt = time.time() - t0
-        tps = args.batch * args.gen / dt
-        print(f"round {r}: {args.batch} seqs x {args.gen} new tokens in "
-              f"{dt:.2f}s = {tps:.1f} tok/s  (first: {toks[0][:8].tolist()})")
+        toks, metrics = timed_generate(prefill, decode, params, prompts, k2,
+                                       batch=args.batch,
+                                       prompt_len=args.prompt_len,
+                                       gen=args.gen)
+        registry.record(r, {"arch": args.arch, "batch": args.batch,
+                            "prompt_len": args.prompt_len, "gen": args.gen,
+                            **metrics})
+        tracer.poll_recompiles()
+        tracer.memory_snapshot(f"round_{r}")
+    print(f"first seq: {toks[0][:8].tolist()}")
+    if profile_dir is not None:
+        jax.profiler.stop_trace()
+        print(f"profiler trace written to {profile_dir}")
+    registry.close()
     return toks
 
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -26,6 +27,7 @@ from ..models.config import ModelConfig
 from ..envs.token_lm import make_token_lm
 from ..algos.pg.gae import gae_associative
 from ..algos.pg.ppo import make_lm_ppo_train_step
+from ..telemetry import trace
 from ..train.optim import adam
 from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from ..utils.logger import Logger
@@ -92,7 +94,23 @@ def main(argv=None):
                     help="kernel backend spec (REPRO_KERNELS syntax: 'ref', "
                          "'interpret', 'attention=pallas,ssd=ref', ...); "
                          "installed before any program is traced")
+    ap.add_argument("--profile", nargs="?", const="", default=None,
+                    metavar="DIR",
+                    help="capture a jax.profiler trace of the whole run into "
+                         "DIR (default <log-dir>/profile) — loadable in "
+                         "perfetto / tensorboard; host phases appear as the "
+                         "telemetry span annotations")
     args = ap.parse_args(argv)
+
+    # host-side telemetry: spans + recompile events to trace.jsonl when a
+    # log dir exists, in-memory ring otherwise
+    tracer = trace.configure(os.path.join(args.log_dir, "trace.jsonl")
+                             if args.log_dir else None)
+    profile_dir = None
+    if args.profile is not None:
+        profile_dir = args.profile or os.path.join(args.log_dir or ".",
+                                                   "profile")
+        jax.profiler.start_trace(profile_dir)
 
     if args.kernels:
         kernel_registry.set_env(args.kernels)
@@ -108,6 +126,15 @@ def main(argv=None):
     opt_state = opt.init(params)
     rollout = jax.jit(make_lm_rollout(cfg, env, args.batch, args.horizon))
     train_step = jax.jit(make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003))
+    tracer.watch_jit("lm.rollout", rollout)
+    tracer.watch_jit("lm.train_step", train_step)
+
+    def _shutdown():
+        tracer.poll_recompiles()
+        tracer.memory_snapshot("end_of_run")
+        if profile_dir is not None:
+            jax.profiler.stop_trace()
+            print(f"profiler trace written to {profile_dir}")
 
     start = 0
     if args.restore and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
@@ -150,6 +177,7 @@ def main(argv=None):
             return params, opt_state, jax.tree_util.tree_map(
                 lambda x: x[-1], ms)
 
+        tracer.watch_jit("lm.fused_window", fused_window)
         t0 = time.time()
         step = start
         while step < args.steps:
@@ -158,40 +186,54 @@ def main(argv=None):
                 nxt = step + args.ckpt_interval - (step % args.ckpt_interval)
                 chunk = min(chunk, nxt - step)
             rng, ks = split_keys(rng, chunk)
-            params, opt_state, metrics = fused_window(params, opt_state, ks)
+            with tracer.span("fused_window", step=step, iters=chunk):
+                params, opt_state, metrics = fused_window(params, opt_state,
+                                                          ks)
             step += chunk
             sps = args.batch * args.horizon * chunk / max(
                 time.time() - t0, 1e-9)
             t0 = time.time()
-            logger.record(step, {
-                "avg_reward": float(metrics["avg_reward"]),
-                "loss": float(metrics["loss"]),
-                "entropy": float(metrics["entropy"]),
-                "samples_per_sec": sps,
-            })
+            with tracer.span("log", step=step):
+                logger.record(step, {
+                    "avg_reward": float(metrics["avg_reward"]),
+                    "loss": float(metrics["loss"]),
+                    "entropy": float(metrics["entropy"]),
+                    "samples_per_sec": sps,
+                })
+            tracer.poll_recompiles()
+            tracer.memory_snapshot(f"window_{step}")
             if args.ckpt_dir and args.ckpt_interval and \
                     step % args.ckpt_interval == 0:
-                save_checkpoint(args.ckpt_dir, step, (params, opt_state))
+                with tracer.span("checkpoint", step=step):
+                    save_checkpoint(args.ckpt_dir, step, (params, opt_state))
+        _shutdown()
         return params
 
     t0 = time.time()
     for step in range(start, args.steps):
         rng, k = jax.random.split(rng)
-        traj, v_last = rollout(params, k)
-        batch = build_batch(traj, v_last)
-        params, opt_state, metrics = train_step(params, opt_state, batch)
+        with tracer.span("rollout", step=step):
+            traj, v_last = rollout(params, k)
+        with tracer.span("update", step=step):
+            batch = build_batch(traj, v_last)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
         if (step + 1) % 10 == 0 or step == args.steps - 1:
             sps = args.batch * args.horizon * 10 / max(time.time() - t0, 1e-9)
             t0 = time.time()
-            logger.record(step + 1, {
-                "avg_reward": float(jnp.mean(traj["reward"])),
-                "loss": float(metrics["loss"]),
-                "entropy": float(metrics["entropy"]),
-                "samples_per_sec": sps,
-            })
+            with tracer.span("log", step=step + 1):
+                logger.record(step + 1, {
+                    "avg_reward": float(jnp.mean(traj["reward"])),
+                    "loss": float(metrics["loss"]),
+                    "entropy": float(metrics["entropy"]),
+                    "samples_per_sec": sps,
+                })
+            tracer.poll_recompiles()
+            tracer.memory_snapshot(f"step_{step + 1}")
         if args.ckpt_dir and args.ckpt_interval and \
                 (step + 1) % args.ckpt_interval == 0:
-            save_checkpoint(args.ckpt_dir, step + 1, (params, opt_state))
+            with tracer.span("checkpoint", step=step + 1):
+                save_checkpoint(args.ckpt_dir, step + 1, (params, opt_state))
+    _shutdown()
     return params
 
 

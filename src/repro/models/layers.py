@@ -219,7 +219,8 @@ def attention_train(params, x, cfg: ModelConfig, *, positions=None, causal=True,
         vr = shd.constrain(jnp.repeat(v, H // Hkv, axis=2), head_spec)
     else:
         kr, vr = k, v
-    use_kernel = (kernel_registry.backend_for("attention") != "ref"
+    use_kernel = (kernel_registry.backend_for("attention",
+                                              site="attention_train") != "ref"
                   and contiguous and causal and not cross and not repeat_kv
                   and not cfg.unroll)
     if use_kernel:
@@ -266,7 +267,8 @@ def attention_decode(params, x, cache_k, cache_v, lengths, cfg: ModelConfig, *,
         kv_len = lengths + 1
     else:
         kv_len = jnp.minimum(lengths + 1, S)
-    if kernel_registry.backend_for("attention") != "ref":
+    if kernel_registry.backend_for("attention",
+                                   site="attention_decode") != "ref":
         out = flash_attention_decode(q, new_k.astype(dt), new_v.astype(dt),
                                      kv_len, softcap=cfg.softcap_attn)
         out = out.reshape(B, 1, H, dh)
@@ -545,7 +547,8 @@ def ssd_block_train(params, u, cfg: ModelConfig, conv_state=None, ssm_state=None
     # state train/prefill shape in f32.  Chunked-prefill continuation
     # (ssm_state), the dry-run unroll variants, and the bf16-intra knob
     # (a ref-path traffic optimization the kernel subsumes) stay on jnp.
-    if (kernel_registry.backend_for("ssd") != "ref" and ssm_state is None
+    if (kernel_registry.backend_for("ssd", site="ssd_block_train") != "ref"
+            and ssm_state is None
             and not cfg.unroll and not cfg.ssd_bf16):
         from ..kernels.ssd_scan.ops import ssd_scan as _ssd_scan_op
 

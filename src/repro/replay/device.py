@@ -80,7 +80,8 @@ def tree_set(tree: jnp.ndarray, idx: jnp.ndarray, priorities: jnp.ndarray):
     Kernel dispatch (trace-time): the blocked backend scatters the leaves and
     rebuilds all levels bottom-up with vectorized pairwise sums — same values
     (each parent is left + right either way), no dynamic ancestor gathers."""
-    if kernel_registry.backend_for("sum_tree") != "ref":
+    if kernel_registry.backend_for("sum_tree",
+                                   site="replay.tree_set") != "ref":
         from ..kernels.sum_tree.ops import tree_update_blocked
 
         return tree_update_blocked(tree, idx, priorities)
@@ -108,7 +109,8 @@ def tree_sample(tree: jnp.ndarray, rng, batch: int):
     size = tree.shape[0] // 2
     total = tree[1]
     u = (jnp.arange(batch) + jax.random.uniform(rng, (batch,))) / batch * total
-    if kernel_registry.backend_for("sum_tree") != "ref":
+    if kernel_registry.backend_for("sum_tree",
+                                   site="replay.tree_sample") != "ref":
         from ..kernels.sum_tree.ops import tree_sample_blocked
 
         return tree_sample_blocked(tree, u)

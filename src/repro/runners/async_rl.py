@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from ..core.batch_spec import make_algo_batch
 from ..replay.host import SequenceReplayBuffer
 from ..replay.interface import (HostSequenceReplay, HostTransitionReplay)
+from ..telemetry import trace
 from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from ..utils.logger import Logger
 
@@ -65,6 +66,11 @@ class AsyncRunner:
         self._collect = jax.jit(self.sampler.collect)
         self._update = jax.jit(self.algo.update)
         self._rng_np = np.random.default_rng(0)
+        self.tracer = trace.get_tracer()
+        # the decoupled actor/learner programs are exactly the entry points
+        # whose silent retracing would serialize the async overlap
+        self.tracer.watch_jit("async.collect", self._collect)
+        self.tracer.watch_jit("async.update", self._update)
 
     @staticmethod
     def _make_replay(buffer):
@@ -102,18 +108,23 @@ class AsyncRunner:
         for it in range(start_iter, self.n_iterations):
             rng, _ = jax.random.split(rng)
             # sampler turn (actor uses CURRENT params — refresh per batch)
-            sampler_state, batch = self._collect(train_state.params, sampler_state)
-            replay_state = self.replay.insert(replay_state, batch)
+            with self.tracer.span("async.collect", iteration=it):
+                sampler_state, batch = self._collect(train_state.params,
+                                                     sampler_state)
+            with self.tracer.span("async.insert", iteration=it):
+                replay_state = self.replay.insert(replay_state, batch)
             generated += steps_per_iter
 
             # optimizer turn: throttle to replay_ratio
-            while (len(self.buffer) >= self.min_replay and
-                   (consumed + self.batch_size) / max(generated, 1)
-                   <= self.replay_ratio):
-                rng, k = jax.random.split(rng)
-                train_state, info = self._optimize(train_state, replay_state, k)
-                last_info = info
-                consumed += self.batch_size
+            with self.tracer.span("async.optimize", iteration=it):
+                while (len(self.buffer) >= self.min_replay and
+                       (consumed + self.batch_size) / max(generated, 1)
+                       <= self.replay_ratio):
+                    rng, k = jax.random.split(rng)
+                    train_state, info = self._optimize(train_state,
+                                                       replay_state, k)
+                    last_info = info
+                    consumed += self.batch_size
 
             if (it + 1) % self.log_interval == 0 and last_info is not None:
                 stats = self.sampler.traj_stats(sampler_state)
@@ -128,6 +139,8 @@ class AsyncRunner:
                     "replay_ratio_actual": consumed / max(generated, 1),
                     "samples_per_sec": sps,
                     **{k_: float(v) for k_, v in stats.items()}, **extra})
+                self.tracer.poll_recompiles()
+                self.tracer.memory_snapshot(f"async_log_{it + 1}")
             if self.ckpt_dir and self.ckpt_interval and \
                     (it + 1) % self.ckpt_interval == 0:
                 save_checkpoint(self.ckpt_dir, it + 1, train_state,
@@ -169,19 +182,24 @@ class AsyncR2D1Runner(AsyncRunner):
         for it in range(self.n_iterations):
             # recurrent state at block start -> stored with the block
             init_state = self.sampler.full_agent_state(sampler_state)["lstm"]
-            sampler_state, batch = self._collect(train_state.params, sampler_state)
-            replay_state = self.replay.insert(replay_state, batch,
-                                              init_state=init_state)
+            with self.tracer.span("async.collect", iteration=it):
+                sampler_state, batch = self._collect(train_state.params,
+                                                     sampler_state)
+            with self.tracer.span("async.insert", iteration=it):
+                replay_state = self.replay.insert(replay_state, batch,
+                                                  init_state=init_state)
             generated += steps_per_iter
 
-            while (self.buffer.tree.total > 0 and
-                   len_filled(self.buffer) >= self.min_replay and
-                   (consumed + self.batch_size * self.buffer.seq_len)
-                   / max(generated, 1) <= self.replay_ratio):
-                rng, k = jax.random.split(rng)
-                train_state, info = self._optimize(train_state, replay_state, k)
-                last_info = info
-                consumed += self.batch_size * self.buffer.seq_len
+            with self.tracer.span("async.optimize", iteration=it):
+                while (self.buffer.tree.total > 0 and
+                       len_filled(self.buffer) >= self.min_replay and
+                       (consumed + self.batch_size * self.buffer.seq_len)
+                       / max(generated, 1) <= self.replay_ratio):
+                    rng, k = jax.random.split(rng)
+                    train_state, info = self._optimize(train_state,
+                                                       replay_state, k)
+                    last_info = info
+                    consumed += self.batch_size * self.buffer.seq_len
 
             if (it + 1) % self.log_interval == 0 and last_info is not None:
                 stats = self.sampler.traj_stats(sampler_state)

@@ -32,14 +32,16 @@ class OnPolicyRunner:
                  log_interval: int = 10, logger: Optional[Logger] = None,
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
                  fuse: bool = True, mesh=None, axis: str = "data",
-                 eval_sampler=None):
+                 eval_sampler=None, sentinels: bool = False,
+                 nan_guard: bool = False):
         self.sampler, self.algo = sampler, algo
         self.n_iterations = n_iterations
         self.log_interval = log_interval
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
         self.eval_sampler = eval_sampler
-        self.loop = TrainLoop(sampler, algo, fuse=fuse, mesh=mesh, axis=axis)
+        self.loop = TrainLoop(sampler, algo, fuse=fuse, mesh=mesh, axis=axis,
+                              sentinels=sentinels, nan_guard=nan_guard)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
@@ -75,7 +77,8 @@ class OffPolicyRunner:
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
                  agent_state_kwargs: Optional[dict] = None,
                  replay: Optional[ReplayLike] = None, fuse: bool = True,
-                 mesh=None, axis: str = "data", eval_sampler=None):
+                 mesh=None, axis: str = "data", eval_sampler=None,
+                 sentinels: bool = False, nan_guard: bool = False):
         self.sampler, self.algo = sampler, algo
         self.n_iterations = n_iterations
         self.min_replay = min_replay
@@ -90,7 +93,8 @@ class OffPolicyRunner:
         self.loop = TrainLoop(sampler, algo, replay=self.replay,
                               batch_size=batch_size,
                               updates_per_collect=updates_per_collect,
-                              fuse=fuse, mesh=mesh, axis=axis)
+                              fuse=fuse, mesh=mesh, axis=axis,
+                              sentinels=sentinels, nan_guard=nan_guard)
 
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3, _ = jax.random.split(rng, 4)

@@ -49,6 +49,9 @@ from jax.experimental.shard_map import shard_map
 
 from ..core.batch_spec import make_algo_batch
 from ..replay.interface import ReplayLike
+from ..telemetry import sentinels as sentinels_mod
+from ..telemetry import trace
+from ..telemetry.sentinels import NonFiniteError
 from ..train.checkpoint import save_checkpoint
 from ..train.optim import Optimizer, cross_replica
 from ..utils.logger import Logger
@@ -86,7 +89,8 @@ class TrainLoop:
     def __init__(self, sampler, algo, *, replay: Optional[ReplayLike] = None,
                  batch_size: Optional[int] = None,
                  updates_per_collect: int = 1, fuse: bool = True,
-                 mesh=None, axis: str = "data"):
+                 mesh=None, axis: str = "data",
+                 sentinels: bool = False, nan_guard: bool = False):
         spec = algo.batch_spec
         if spec is None:
             raise ValueError(f"{type(algo).__name__} declares no BatchSpec")
@@ -105,6 +109,11 @@ class TrainLoop:
         self.k = updates_per_collect
         self.fuse = fuse
         self.mesh, self.axis = mesh, axis
+        # in-program telemetry: sentinels ride the scan as extra stacked ys;
+        # nan_guard implies them (the guard reads the nonfinite channel)
+        self.nan_guard = nan_guard
+        self.sentinels_on = sentinels or nan_guard
+        self.tracer = trace.get_tracer()
         if mesh is not None:
             if not hasattr(sampler, "local_collect"):
                 raise ValueError("mesh mode needs a sharded sampler exposing "
@@ -130,6 +139,11 @@ class TrainLoop:
                     setattr(algo, name, cross_replica(val, axis))
         self._step = jax.jit(self._iteration)
         self._window = jax.jit(self._window_impl)
+        # recompilation detector: every jitted entry point is watched; the
+        # host driver polls trace-cache growth at boundaries (a silently
+        # retracing window is the classic fused-loop perf killer)
+        self.tracer.watch_jit("train_loop.step", self._step)
+        self.tracer.watch_jit("train_loop.window", self._window)
         # sharded programs are built lazily — their PartitionSpec trees need
         # the actual state pytrees, which exist only once init() has run.
         self._sharded_window = None
@@ -138,6 +152,8 @@ class TrainLoop:
         # impl) every fused iteration — no per-pass re-jit.
         if mesh is None:
             self.collect_insert = jax.jit(self._collect_insert_impl)
+            self.tracer.watch_jit("train_loop.collect_insert",
+                                  self.collect_insert)
         else:
             self.collect_insert = self._sharded_collect_insert
 
@@ -147,7 +163,20 @@ class TrainLoop:
         replay_state = self.replay.insert(replay_state, batch)
         return sampler_state, replay_state
 
+    def _sentinels(self, prev_params, train_state, info, replay_state,
+                   env_steps: int):
+        """One iteration's Sentinels pytree, or None when disabled — pure
+        reads over already-live values, so enabling them never perturbs the
+        parameter math (bit-identity pinned in tests/test_telemetry.py)."""
+        if not self.sentinels_on:
+            return None
+        return sentinels_mod.compute(prev_params, train_state.params,
+                                     info.loss, info.grad_norm, replay_state,
+                                     env_steps)
+
     def _iteration(self, train_state, sampler_state, replay_state, rng):
+        prev_params = train_state.params
+        env_steps = self.sampler.horizon * self.sampler.n_envs
         if self.spec.on_policy:
             sampler_state, batch = self.sampler.collect(train_state.params,
                                                         sampler_state)
@@ -156,7 +185,9 @@ class TrainLoop:
             algo_batch = make_algo_batch(self.spec, batch,
                                          {"bootstrap_value": bootstrap})
             train_state, info = self.algo.update(train_state, algo_batch, rng)
-            return train_state, sampler_state, replay_state, info
+            sent = self._sentinels(prev_params, train_state, info, None,
+                                   env_steps)
+            return train_state, sampler_state, replay_state, info, sent
 
         sampler_state, replay_state = self._collect_insert_impl(
             train_state.params, sampler_state, replay_state)
@@ -174,17 +205,20 @@ class TrainLoop:
         ks = jax.random.split(rng, self.k)
         (train_state, replay_state), infos = jax.lax.scan(
             do_update, (train_state, replay_state), ks)
-        return train_state, sampler_state, replay_state, last_of(infos)
+        info = last_of(infos)
+        sent = self._sentinels(prev_params, train_state, info, replay_state,
+                               env_steps)
+        return train_state, sampler_state, replay_state, info, sent
 
     def _window_impl(self, train_state, sampler_state, replay_state, keys):
         def body(carry, k):
             ts, ss, rs = carry
-            ts, ss, rs, info = self._iteration(ts, ss, rs, k)
-            return (ts, ss, rs), info
+            ts, ss, rs, info, sent = self._iteration(ts, ss, rs, k)
+            return (ts, ss, rs), (info, sent)
 
-        (ts, ss, rs), infos = jax.lax.scan(
+        (ts, ss, rs), (infos, sents) = jax.lax.scan(
             body, (train_state, sampler_state, replay_state), keys)
-        return ts, ss, rs, infos
+        return ts, ss, rs, infos, sents
 
     # -- SPMD bodies (run INSIDE shard_map over self.axis) -------------------
     def _replicate_info(self, info):
@@ -201,7 +235,20 @@ class TrainLoop:
 
         return jax.tree_util.tree_map(rep, info)
 
+    def _sentinels_local(self, prev_params, train_state, info, replay_state):
+        """Shard-local sentinels -> replicated global values (psum/pmean/
+        pmax per field; see telemetry/sentinels.py replicate)."""
+        if not self.sentinels_on:
+            return None
+        local_steps = self.sampler.horizon * self.sampler.n_envs \
+            // self.n_shards
+        sent = sentinels_mod.compute(prev_params, train_state.params,
+                                     info.loss, info.grad_norm, replay_state,
+                                     local_steps)
+        return sentinels_mod.replicate(sent, self.axis)
+
     def _iteration_local(self, train_state, sampler_state, replay_state, rng):
+        prev_params = train_state.params
         if self.spec.on_policy:
             sampler_state, batch = self.sampler.local_collect(
                 train_state.params, sampler_state)
@@ -210,8 +257,10 @@ class TrainLoop:
             algo_batch = make_algo_batch(self.spec, batch,
                                          {"bootstrap_value": bootstrap})
             train_state, info = self.algo.update(train_state, algo_batch, rng)
-            return (train_state, sampler_state, replay_state,
-                    self._replicate_info(info))
+            info = self._replicate_info(info)
+            return (train_state, sampler_state, replay_state, info,
+                    self._sentinels_local(prev_params, train_state, info,
+                                          None))
 
         sampler_state, batch = self.sampler.local_collect(train_state.params,
                                                           sampler_state)
@@ -234,8 +283,10 @@ class TrainLoop:
         ks = jax.random.split(rng, self.k)
         (train_state, replay_state), infos = jax.lax.scan(
             do_update, (train_state, replay_state), ks)
-        return (train_state, sampler_state, replay_state,
-                self._replicate_info(last_of(infos)))
+        info = self._replicate_info(last_of(infos))
+        return (train_state, sampler_state, replay_state, info,
+                self._sentinels_local(prev_params, train_state, info,
+                                      replay_state))
 
     def _sharded_window_impl(self, train_state, sampler_state, replay_state,
                              keys):
@@ -244,24 +295,26 @@ class TrainLoop:
 
         def body(carry, k):
             ts, ss, rs = carry
-            ts, ss, rs, info = self._iteration_local(ts, ss, rs, k)
-            return (ts, ss, rs), info
+            ts, ss, rs, info, sent = self._iteration_local(ts, ss, rs, k)
+            return (ts, ss, rs), (info, sent)
 
-        (ts, ss, rs), infos = jax.lax.scan(
+        (ts, ss, rs), (infos, sents) = jax.lax.scan(
             body, (train_state, sampler_state, replay_state), keys)
         if rs is not None:
             rs = self.replay.merge_view(rs)
-        return ts, ss, rs, infos
+        return ts, ss, rs, infos, sents
 
     def _build_sharded(self, sampler_state, replay_state):
         ss_spec = self.sampler.state_spec(sampler_state)
         if self.spec.on_policy:
             def window(ts, ss, keys):
-                ts, ss, _, infos = self._sharded_window_impl(ts, ss, None, keys)
-                return ts, ss, infos
+                ts, ss, _, infos, sents = self._sharded_window_impl(
+                    ts, ss, None, keys)
+                return ts, ss, infos, sents
             f = shard_map(window, mesh=self.mesh,
                           in_specs=(P(), ss_spec, P()),
-                          out_specs=(P(), ss_spec, P()), check_rep=False)
+                          out_specs=(P(), ss_spec, P(), P()),
+                          check_rep=False)
         else:
             rs_spec = self.replay.shard_spec(self.axis)
 
@@ -269,17 +322,19 @@ class TrainLoop:
                 return self._sharded_window_impl(ts, ss, rs, keys)
             f = shard_map(window, mesh=self.mesh,
                           in_specs=(P(), ss_spec, rs_spec, P()),
-                          out_specs=(P(), ss_spec, rs_spec, P()),
+                          out_specs=(P(), ss_spec, rs_spec, P(), P()),
                           check_rep=False)
         self._sharded_window = jax.jit(f)
+        self.tracer.watch_jit("train_loop.sharded_window",
+                              self._sharded_window)
 
     def _call_sharded(self, train_state, sampler_state, replay_state, keys):
         if self._sharded_window is None:
             self._build_sharded(sampler_state, replay_state)
         if self.spec.on_policy:
-            ts, ss, infos = self._sharded_window(train_state, sampler_state,
-                                                 keys)
-            return ts, ss, None, infos
+            ts, ss, infos, sents = self._sharded_window(
+                train_state, sampler_state, keys)
+            return ts, ss, None, infos, sents
         return self._sharded_window(train_state, sampler_state, replay_state,
                                     keys)
 
@@ -299,31 +354,40 @@ class TrainLoop:
         return self._sharded_ci(params, sampler_state, replay_state)
 
     # -- host drivers --------------------------------------------------------
+    @staticmethod
+    def _stack(items):
+        if items and items[0] is None:
+            return None
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *items)
+
     def run_window(self, train_state, sampler_state, replay_state, keys):
-        """Run len(keys) iterations; returns (ts, ss, rs, stacked infos).
-        Fused: one device program (shard_map'd over the data axis in mesh
-        mode).  Unfused: one dispatch per iteration."""
+        """Run len(keys) iterations; returns (ts, ss, rs, stacked infos,
+        stacked sentinels-or-None).  Fused: one device program (shard_map'd
+        over the data axis in mesh mode).  Unfused: one dispatch per
+        iteration."""
         if self.mesh is not None:
             if self.fuse:
                 return self._call_sharded(train_state, sampler_state,
                                           replay_state, keys)
-            infos = []
+            infos, sents = [], []
             for i in range(keys.shape[0]):
-                train_state, sampler_state, replay_state, info = \
+                train_state, sampler_state, replay_state, info, sent = \
                     self._call_sharded(train_state, sampler_state,
                                        replay_state, keys[i:i + 1])
                 infos.append(last_of(info))
-            stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *infos)
-            return train_state, sampler_state, replay_state, stacked
+                sents.append(last_of(sent) if sent is not None else None)
+            return (train_state, sampler_state, replay_state,
+                    self._stack(infos), self._stack(sents))
         if self.fuse:
             return self._window(train_state, sampler_state, replay_state, keys)
-        infos = []
+        infos, sents = [], []
         for i in range(keys.shape[0]):
-            train_state, sampler_state, replay_state, info = self._step(
+            train_state, sampler_state, replay_state, info, sent = self._step(
                 train_state, sampler_state, replay_state, keys[i])
             infos.append(info)
-        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *infos)
-        return train_state, sampler_state, replay_state, stacked
+            sents.append(sent)
+        return (train_state, sampler_state, replay_state,
+                self._stack(infos), self._stack(sents))
 
     def drive(self, rng, train_state, sampler_state, replay_state, *,
               n_iterations: int, log_interval: int, logger: Logger,
@@ -347,9 +411,11 @@ class TrainLoop:
         # eval keys come from a forked stream so enabling/disabling eval
         # never perturbs the training keys
         eval_rng = jax.random.fold_in(rng, 0xE7A1)
+        tracer = self.tracer
         t0 = time.time()
         since_log = 0
         last_info = None
+        last_sents = None
         it = start_iter
         while it < n_iterations:
             boundary = it + log_interval - (it % log_interval)
@@ -358,29 +424,51 @@ class TrainLoop:
                                it + ckpt_interval - (it % ckpt_interval))
             boundary = min(boundary, n_iterations)
             rng, keys = split_keys(rng, boundary - it)
-            train_state, sampler_state, replay_state, infos = self.run_window(
-                train_state, sampler_state, replay_state, keys)
+            with tracer.span("collect_train_window", iter_start=it,
+                             iters=boundary - it):
+                (train_state, sampler_state, replay_state, infos,
+                 sents) = self.run_window(train_state, sampler_state,
+                                          replay_state, keys)
             last_info = last_of(infos)
+            if sents is not None:
+                last_sents = sents
+                if self.nan_guard:
+                    # the ONLY in-window sync: one small stacked channel
+                    hit = sentinels_mod.first_nonfinite_iter(sents)
+                    if hit is not None:
+                        bad_iter, n_bad = it + hit[0], hit[1]
+                        tracer.emit("nan_guard", "train_loop",
+                                    iteration=bad_iter, n_bad=n_bad)
+                        raise NonFiniteError(bad_iter, n_bad)
             since_log += boundary - it
             it = boundary
             if it % log_interval == 0:
-                stats = self.sampler.traj_stats(sampler_state)
-                sampler_state = self.sampler.reset_stats(sampler_state)
-                sps = steps_per_iter * since_log / max(time.time() - t0, 1e-9)
-                extra = {k: v for k, v in last_info.extra.items()
-                         if jnp.ndim(v) == 0}
-                row = {"iter": it, "loss": last_info.loss,
-                       "grad_norm": last_info.grad_norm,
-                       "samples_per_sec": sps, **stats, **extra}
-                if eval_sampler is not None:
-                    em = eval_sampler.run(train_state.params,
-                                          jax.random.fold_in(eval_rng, it))
-                    row.update({f"eval_{k}": v for k, v in em.items()})
-                logger.record(it * steps_per_iter, row)
+                with tracer.span("log_boundary", iteration=it):
+                    stats = self.sampler.traj_stats(sampler_state)
+                    sampler_state = self.sampler.reset_stats(sampler_state)
+                    sps = steps_per_iter * since_log / max(
+                        time.time() - t0, 1e-9)
+                    extra = {k: v for k, v in last_info.extra.items()
+                             if jnp.ndim(v) == 0}
+                    row = {"iter": it, "loss": last_info.loss,
+                           "grad_norm": last_info.grad_norm,
+                           "samples_per_sec": sps, **stats, **extra}
+                    if last_sents is not None:
+                        row.update(sentinels_mod.summarize(last_sents))
+                    if eval_sampler is not None:
+                        with tracer.span("eval", iteration=it):
+                            em = eval_sampler.run(
+                                train_state.params,
+                                jax.random.fold_in(eval_rng, it))
+                        row.update({f"eval_{k}": v for k, v in em.items()})
+                    logger.record(it * steps_per_iter, row)
+                tracer.poll_recompiles()
+                tracer.memory_snapshot(f"log_boundary_{it}")
                 t0, since_log = time.time(), 0
             if ckpt_dir and ckpt_interval and it % ckpt_interval == 0:
-                payload = (train_state if ckpt_payload is None
-                           else ckpt_payload(train_state, replay_state))
-                save_checkpoint(ckpt_dir, it, payload,
-                                extra={"iteration": it})
+                with tracer.span("checkpoint", iteration=it):
+                    payload = (train_state if ckpt_payload is None
+                               else ckpt_payload(train_state, replay_state))
+                    save_checkpoint(ckpt_dir, it, payload,
+                                    extra={"iteration": it})
         return train_state, sampler_state, replay_state, last_info

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from ..core.agent import as_eval
+from ..telemetry import sentinels as sentinels_mod
+from ..telemetry import trace
 from .serial import SerialSampler
 
 F32 = jnp.float32
@@ -54,6 +56,7 @@ class EvalSampler:
         self._sampler = SerialSampler(env_spec, self.agent, n_envs,
                                       self.horizon)
         self._run = jax.jit(self._run_impl)
+        trace.get_tracer().watch_jit("eval_sampler.run", self._run)
 
     def _run_impl(self, params, rng):
         state = self._sampler.init(rng, self.agent_state_kwargs)
@@ -97,8 +100,12 @@ class EvalSampler:
         avg_len = jnp.where(none_done, jnp.mean(ep_len), tot_len / n)
         return {"avg_return": avg_ret, "avg_len": avg_len,
                 "episodes": count,
-                "steps": jnp.asarray(self.horizon * B, jnp.int32)}
+                "steps": jnp.asarray(self.horizon * B, jnp.int32),
+                # in-program sentinel: evaluation is where silently-corrupted
+                # params first become visible off the training stream
+                "param_nonfinite": sentinels_mod.count_nonfinite(params)}
 
     def run(self, params, rng) -> dict:
         """Evaluate ``params``; returns scalar metrics (device arrays)."""
-        return self._run(params, rng)
+        with trace.get_tracer().span("eval_sampler.run"):
+            return self._run(params, rng)

@@ -1,0 +1,16 @@
+"""Telemetry subsystem: in-program sentinels, host-side tracing, metric sinks.
+
+Three layers (see docs/architecture.md "Observability"):
+
+- :mod:`repro.telemetry.sentinels` — on-device health scalars threaded
+  through the fused train window (norms, loss moments, non-finite counts,
+  replay stats), with the ``nan_guard`` tripwire;
+- :mod:`repro.telemetry.trace` — host-side spans, structured JSONL events,
+  the recompilation detector, device-memory snapshots;
+- :mod:`repro.telemetry.metrics` — ``MetricsRegistry`` fanning log rows out
+  to console / CSV / JSONL / TensorBoard sinks (the old ``Logger`` is a
+  preset over this).
+"""
+from .metrics import MetricsRegistry  # noqa: F401
+from .sentinels import NonFiniteError, Sentinels  # noqa: F401
+from .trace import Tracer, configure, get_tracer, span  # noqa: F401

@@ -1,0 +1,248 @@
+"""Metric sinks behind one registry.
+
+rlpyt kept rllab's tabular logger; here that logger becomes ONE sink behind
+``MetricsRegistry`` so every producer — TrainLoop log rows, the async
+runner, ``launch/serve.py`` round metrics, benchmarks — shares a single
+schema and fans out to any combination of:
+
+- ``console``: the aligned key/value table (the original logger's view);
+- ``csv``:     append-only ``progress.csv`` whose header GROWS with the
+  field set.  The seed logger froze ``_csv_fields`` on the first record and
+  silently dropped later keys (``extrasaction="ignore"``), and misaligned
+  columns when restarting into an existing file — this sink rewrites the
+  header (and re-pads old rows) whenever new fields appear, and adopts the
+  existing header on restart so appended rows stay aligned;
+- ``jsonl``:   one JSON object per row — the machine-readable feed the
+  telemetry tests and CI artifacts consume;
+- ``tb``:      optional TensorBoard-format scalars, written as genuine
+  tfevents records (handwritten Event protobuf + TFRecord framing with
+  masked CRC-32C) so no tensorboard/protobuf dependency is needed.
+
+``utils/logger.py`` re-exports ``Logger`` as a thin registry preset, so
+every existing call site keeps its API.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import socket
+import struct
+import sys
+import time
+from typing import Iterable, Optional
+
+
+def _scalar(v):
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return v
+
+
+class Sink:
+    def write(self, row: dict) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class ConsoleSink(Sink):
+    """Aligned key/value table per row (the original Logger output)."""
+
+    def __init__(self, stream=None):
+        self.stream = stream or sys.stdout
+
+    def write(self, row: dict) -> None:
+        width = max(len(k) for k in row)
+        lines = [f"| {k.ljust(width)} | {self._fmt(v):>12} |"
+                 for k, v in row.items()]
+        bar = "-" * len(lines[0])
+        print("\n".join([bar] + lines + [bar]), file=self.stream, flush=True)
+
+    @staticmethod
+    def _fmt(v):
+        if isinstance(v, float):
+            return f"{v:.4g}"
+        return str(v)
+
+
+class CSVSink(Sink):
+    """CSV with a header that grows with the field set.
+
+    On open, an existing file's header is adopted (restart-append).  When a
+    row introduces new fields, the whole file is rewritten once with the
+    union header and old rows padded empty — columns never misalign and keys
+    are never silently dropped.
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._fields: Optional[list] = None
+        if os.path.exists(path) and os.path.getsize(path) > 0:
+            with open(path, newline="") as f:
+                header = next(csv.reader(f), None)
+            if header:
+                self._fields = list(header)
+
+    def write(self, row: dict) -> None:
+        if self._fields is None:
+            self._fields = list(row)
+            with open(self.path, "a", newline="") as f:
+                csv.writer(f).writerow(self._fields)
+        new = [k for k in row if k not in self._fields]
+        if new:
+            self._rewrite_with(self._fields + new)
+        with open(self.path, "a", newline="") as f:
+            csv.DictWriter(f, fieldnames=self._fields,
+                           restval="").writerow(row)
+
+    def _rewrite_with(self, fields: list) -> None:
+        rows: list = []
+        if os.path.exists(self.path) and os.path.getsize(self.path) > 0:
+            with open(self.path, newline="") as f:
+                rows = list(csv.DictReader(f))
+        tmp = self.path + ".tmp"
+        with open(tmp, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            for r in rows:
+                r.pop(None, None)  # stray cells from a shrunken header
+                w.writerow(r)
+        os.replace(tmp, self.path)
+        self._fields = fields
+
+
+class JSONLSink(Sink):
+    def __init__(self, path: str):
+        self._file = open(path, "a", buffering=1)
+
+    def write(self, row: dict) -> None:
+        self._file.write(json.dumps(row) + "\n")
+
+    def close(self) -> None:
+        self._file.close()
+
+
+# -- TensorBoard event-file sink (no tensorboard/protobuf dependency) --------
+
+_CRC_TABLE = None
+
+
+def _crc32c(data: bytes) -> int:
+    """Software CRC-32C (Castagnoli), table-driven."""
+    global _CRC_TABLE
+    if _CRC_TABLE is None:
+        _CRC_TABLE = []
+        for i in range(256):
+            c = i
+            for _ in range(8):
+                c = (c >> 1) ^ 0x82F63B78 if c & 1 else c >> 1
+            _CRC_TABLE.append(c)
+    crc = 0xFFFFFFFF
+    for b in data:
+        crc = _CRC_TABLE[(crc ^ b) & 0xFF] ^ (crc >> 8)
+    return crc ^ 0xFFFFFFFF
+
+
+def _masked_crc(data: bytes) -> int:
+    crc = _crc32c(data)
+    return (((crc >> 15) | (crc << 17)) + 0xA282EAD8) & 0xFFFFFFFF
+
+
+def _varint(n: int) -> bytes:
+    out = b""
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out += bytes([b | 0x80])
+        else:
+            return out + bytes([b])
+
+
+def _tb_record(payload: bytes) -> bytes:
+    """TFRecord framing: len, masked_crc(len), payload, masked_crc(payload)."""
+    header = struct.pack("<Q", len(payload))
+    return (header + struct.pack("<I", _masked_crc(header)) + payload
+            + struct.pack("<I", _masked_crc(payload)))
+
+
+def _tb_event(wall_time: float, step: int, scalars: dict) -> bytes:
+    """Event{wall_time=1, step=2, summary=5{value=1{tag=1, simple_value=2}}}."""
+    values = b""
+    for tag, val in scalars.items():
+        t = tag.encode()
+        v = (b"\x0a" + _varint(len(t)) + t           # Value.tag
+             + b"\x15" + struct.pack("<f", val))     # Value.simple_value
+        values += b"\x0a" + _varint(len(v)) + v      # Summary.value
+    return (b"\x09" + struct.pack("<d", wall_time)   # Event.wall_time
+            + b"\x10" + _varint(step)                # Event.step
+            + b"\x2a" + _varint(len(values)) + values)  # Event.summary
+
+
+class TBSink(Sink):
+    """Scalar summaries in genuine tfevents format (loadable by TensorBoard
+    and anything else that reads TFRecord'd Event protos)."""
+
+    def __init__(self, log_dir: str):
+        name = f"events.out.tfevents.{int(time.time())}.{socket.gethostname()}"
+        self._file = open(os.path.join(log_dir, name), "ab")
+        version = b"\x1a" + _varint(len(b"brain.Event:2")) + b"brain.Event:2"
+        self._file.write(_tb_record(
+            b"\x09" + struct.pack("<d", time.time()) + version))
+        self._file.flush()
+
+    def write(self, row: dict) -> None:
+        step = int(row.get("step", 0))
+        scalars = {k: float(v) for k, v in row.items()
+                   if isinstance(v, (int, float)) and k != "step"}
+        self._file.write(_tb_record(_tb_event(time.time(), step, scalars)))
+        self._file.flush()
+
+    def close(self) -> None:
+        self._file.close()
+
+
+# -- the registry ------------------------------------------------------------
+
+class MetricsRegistry:
+    """Fan one ``record(step, metrics)`` call out to the configured sinks.
+
+    File-backed sinks (csv/jsonl/tb) require ``log_dir`` and are silently
+    skipped without one — console-only registries stay zero-IO.
+    """
+
+    def __init__(self, log_dir: Optional[str] = None, *,
+                 sinks: Iterable[str] = ("console", "csv", "jsonl"),
+                 csv_filename: str = "progress.csv",
+                 jsonl_filename: Optional[str] = None, stream=None):
+        self.log_dir = log_dir
+        self._t0 = time.time()
+        self.sinks: list = []
+        sinks = tuple(sinks)
+        if log_dir:
+            os.makedirs(log_dir, exist_ok=True)
+        if "console" in sinks:
+            self.sinks.append(ConsoleSink(stream))
+        if log_dir:
+            if "csv" in sinks:
+                self.sinks.append(CSVSink(os.path.join(log_dir, csv_filename)))
+            if "jsonl" in sinks:
+                jf = jsonl_filename or (
+                    os.path.splitext(csv_filename)[0] + ".jsonl")
+                self.sinks.append(JSONLSink(os.path.join(log_dir, jf)))
+            if "tb" in sinks:
+                self.sinks.append(TBSink(log_dir))
+
+    def record(self, step: int, metrics: dict) -> None:
+        row = {"step": int(step),
+               "wall_time": round(time.time() - self._t0, 2),
+               **{k: _scalar(v) for k, v in metrics.items()}}
+        for s in self.sinks:
+            s.write(row)
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()

@@ -1,0 +1,162 @@
+"""In-program health sentinels for the fused train window.
+
+The scan-fused TrainLoop gives the host no view inside a log window: by the
+time metrics materialize, a NaN that appeared at iteration 3 of 50 has eaten
+the whole window.  ``Sentinels`` is a pytree of per-iteration scalars
+computed ON DEVICE inside the scan body — norms, loss moments, non-finite
+counts, replay occupancy/priority mass, env-step throughput — stacked by the
+scan like any other ``y`` and materialized only at log boundaries, so the
+instrumented window stays one program and the parameter math is untouched
+(bit-identity is pinned by tests/test_telemetry.py).
+
+Under the SPMD window the same sentinels are computed shard-locally and made
+replicated by :func:`replicate`: extensive quantities (env steps, replay
+fill, priority mass) psum to their global values, replicated quantities
+(norms over replicated params, loss after the info pmean) pmean through
+unchanged, and per-shard maxima take a pmax.
+
+``nan_guard``: :func:`first_nonfinite_iter` scans the stacked
+``nonfinite_params`` channel host-side and returns the first in-window
+iteration whose params went non-finite — the TrainLoop raises
+:class:`NonFiniteError` carrying that (global) iteration index.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+class Sentinels(NamedTuple):
+    """Per-iteration on-device health scalars (all shape ())."""
+    loss: Any
+    loss_sq: Any            # second moment -> window variance at the host
+    grad_norm: Any
+    param_norm: Any
+    update_norm: Any        # ||params_new - params_old||_2
+    nonfinite_grads: Any    # 0/1: global grad norm went inf/nan
+    nonfinite_params: Any   # count of non-finite parameter elements
+    replay_filled: Any      # occupied slots (0 when no device replay)
+    replay_priority_mass: Any   # sum-tree root (total priority mass)
+    replay_priority_max: Any    # max leaf priority
+    env_steps: Any          # env steps generated this iteration
+
+
+class NonFiniteError(RuntimeError):
+    """nan_guard tripwire: params went non-finite inside a fused window."""
+
+    def __init__(self, iteration: int, n_bad: int):
+        super().__init__(
+            f"non-finite parameters first appeared at iteration {iteration} "
+            f"({n_bad} bad elements)")
+        self.iteration = iteration
+        self.n_bad = n_bad
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(F32))) for l in leaves))
+
+
+def count_nonfinite(tree) -> jnp.ndarray:
+    """Total non-finite elements across a pytree (int32 scalar)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(jnp.sum((~jnp.isfinite(l.astype(F32))).astype(jnp.int32))
+               for l in leaves)
+
+
+def compute(prev_params, new_params, loss, grad_norm, replay_state,
+            env_steps: int) -> Sentinels:
+    """Build one iteration's sentinels (pure jnp; callable inside scan).
+
+    ``replay_state`` is a device ``ReplayState`` (local view under SPMD) or
+    None for on-policy loops.  ``grad_norm`` is the already-computed value
+    from OptInfo, so the only extra work is two tree reductions over params
+    — cheap next to the update that just touched every parameter thrice.
+    """
+    loss = jnp.asarray(loss, F32)
+    delta = jax.tree_util.tree_map(
+        lambda a, b: a.astype(F32) - b.astype(F32), new_params, prev_params)
+    if replay_state is not None:
+        size = replay_state.tree.shape[0] // 2
+        filled = replay_state.filled.astype(F32)
+        mass = replay_state.tree[1]
+        pmax = jnp.max(replay_state.tree[size:])
+    else:
+        filled = jnp.zeros((), F32)
+        mass = jnp.zeros((), F32)
+        pmax = jnp.zeros((), F32)
+    gn = jnp.asarray(grad_norm, F32)
+    return Sentinels(
+        loss=loss,
+        loss_sq=jnp.square(loss),
+        grad_norm=gn,
+        param_norm=_global_norm(new_params),
+        update_norm=_global_norm(delta),
+        nonfinite_grads=(~jnp.isfinite(gn)).astype(jnp.int32),
+        nonfinite_params=count_nonfinite(new_params),
+        replay_filled=filled,
+        replay_priority_mass=mass,
+        replay_priority_max=pmax,
+        env_steps=jnp.asarray(env_steps, jnp.int32),
+    )
+
+
+def replicate(s: Sentinels, axis: str) -> Sentinels:
+    """Shard-local -> replicated global sentinels (inside shard_map)."""
+    return Sentinels(
+        # loss comes from the replicated OptInfo; params are replicated, so
+        # their norms / non-finite counts pmean through unchanged
+        loss=jax.lax.pmean(s.loss, axis),
+        loss_sq=jax.lax.pmean(s.loss_sq, axis),
+        grad_norm=jax.lax.pmean(s.grad_norm, axis),
+        param_norm=jax.lax.pmean(s.param_norm, axis),
+        update_norm=jax.lax.pmean(s.update_norm, axis),
+        nonfinite_grads=jax.lax.pmax(s.nonfinite_grads, axis),
+        nonfinite_params=jax.lax.pmax(s.nonfinite_params, axis),
+        # extensive: each shard owns an independent ring / env slice
+        replay_filled=jax.lax.psum(s.replay_filled, axis),
+        replay_priority_mass=jax.lax.psum(s.replay_priority_mass, axis),
+        replay_priority_max=jax.lax.pmax(s.replay_priority_max, axis),
+        env_steps=jax.lax.psum(s.env_steps, axis),
+    )
+
+
+def summarize(stacked: Sentinels) -> dict:
+    """Window-stacked sentinels -> scalar log row (one host materialization).
+
+    Gauges (norms, replay occupancy) report the last iteration; moments
+    aggregate the whole window; counters sum it.
+    """
+    s = jax.tree_util.tree_map(np.asarray, jax.device_get(stacked))
+    n = max(s.loss.shape[0], 1)
+    mean = float(s.loss.mean())
+    var = max(float(s.loss_sq.mean()) - mean * mean, 0.0)
+    return {
+        "sent_loss_mean": mean,
+        "sent_loss_std": float(np.sqrt(var)),
+        "sent_grad_norm": float(s.grad_norm[-1]),
+        "sent_param_norm": float(s.param_norm[-1]),
+        "sent_update_norm": float(s.update_norm[-1]),
+        "sent_nonfinite_grads": int(s.nonfinite_grads.sum()),
+        "sent_nonfinite_params": int(s.nonfinite_params[-1]),
+        "sent_replay_filled": float(s.replay_filled[-1]),
+        "sent_priority_mass": float(s.replay_priority_mass[-1]),
+        "sent_priority_max": float(s.replay_priority_max[-1]),
+        "sent_env_steps": int(s.env_steps.sum()),
+        "sent_window_iters": int(n),
+    }
+
+
+def first_nonfinite_iter(stacked: Sentinels) -> Optional[tuple]:
+    """(window-local first bad iteration, bad-element count) or None."""
+    bad = np.asarray(jax.device_get(stacked.nonfinite_params))
+    hits = np.flatnonzero(bad > 0)
+    if hits.size == 0:
+        return None
+    i = int(hits[0])
+    return i, int(bad[i])

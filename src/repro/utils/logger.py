@@ -1,52 +1,18 @@
-"""Tabular logger (the paper keeps rllab's logger; this is the minimal
-equivalent): prints aligned key/value tables and appends CSV rows."""
+"""Tabular logger (the paper keeps rllab's logger) — now a preset over the
+telemetry MetricsRegistry: the same aligned console table and CSV file, plus
+a JSONL twin of every row, with the CSV header growing as the field set
+grows (the seed logger froze its fields on the first record and silently
+dropped later keys; see telemetry/metrics.py CSVSink)."""
 from __future__ import annotations
 
-import csv
-import os
-import sys
-import time
-from typing import Optional
+from typing import Iterable, Optional
+
+from ..telemetry.metrics import MetricsRegistry
 
 
-class Logger:
-    def __init__(self, log_dir: Optional[str] = None, filename: str = "progress.csv",
-                 stream=None):
-        self.log_dir = log_dir
-        self.stream = stream or sys.stdout
-        self._csv_path = None
-        self._csv_fields = None
-        self._t0 = time.time()
-        if log_dir:
-            os.makedirs(log_dir, exist_ok=True)
-            self._csv_path = os.path.join(log_dir, filename)
-
-    def record(self, step: int, metrics: dict):
-        metrics = {"step": step, "wall_time": round(time.time() - self._t0, 2),
-                   **{k: self._scalar(v) for k, v in metrics.items()}}
-        width = max(len(k) for k in metrics)
-        lines = [f"| {k.ljust(width)} | {self._fmt(v):>12} |" for k, v in metrics.items()]
-        bar = "-" * len(lines[0])
-        print("\n".join([bar] + lines + [bar]), file=self.stream, flush=True)
-        if self._csv_path:
-            exists = os.path.exists(self._csv_path)
-            if self._csv_fields is None:
-                self._csv_fields = list(metrics)
-            with open(self._csv_path, "a", newline="") as f:
-                w = csv.DictWriter(f, fieldnames=self._csv_fields, extrasaction="ignore")
-                if not exists:
-                    w.writeheader()
-                w.writerow(metrics)
-
-    @staticmethod
-    def _scalar(v):
-        try:
-            return float(v)
-        except (TypeError, ValueError):
-            return v
-
-    @staticmethod
-    def _fmt(v):
-        if isinstance(v, float):
-            return f"{v:.4g}"
-        return str(v)
+class Logger(MetricsRegistry):
+    def __init__(self, log_dir: Optional[str] = None,
+                 filename: str = "progress.csv", stream=None,
+                 sinks: Iterable[str] = ("console", "csv", "jsonl")):
+        super().__init__(log_dir, sinks=sinks, csv_filename=filename,
+                         stream=stream)

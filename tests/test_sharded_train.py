@@ -49,7 +49,7 @@ def run(loop):
     ts = algo.init_train_state(rng, params)
     ss = loop.sampler.init(jax.random.PRNGKey(1))
     _, keys = split_keys(jax.random.PRNGKey(2), 20)
-    ts, ss, _, infos = loop.run_window(ts, ss, None, keys)
+    ts, ss, _, infos, _ = loop.run_window(ts, ss, None, keys)
     return ts, infos
 
 ts_ref, infos_ref = run(loop_ref)
