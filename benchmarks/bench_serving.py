@@ -1,23 +1,45 @@
 """Batched action-selection / decode throughput (paper Fig 1 center/right at
-LM scale): tokens/sec for prefill+decode on smoke backbones — one row per
-family exercising every cache type.
+LM scale), in two parts:
 
-Uses the SAME phase split and metric schema as ``repro.launch.serve``
-(:func:`timed_generate`): prefill_tok_per_sec / decode_tok_per_sec /
-decode_step_ms, so a bench row and a serving-telemetry JSONL line are
-directly comparable."""
+1. Fixed-batch decode rows — tokens/sec for prefill+decode on smoke
+   backbones, one row per family exercising every cache type.  Uses the SAME
+   phase split and metric schema as ``repro.launch.serve``
+   (:func:`timed_generate`), so a bench row and a serving-telemetry JSONL
+   line are directly comparable.
+2. Static vs continuous batching — the SAME Poisson arrival trace (mixed
+   prompt/generation lengths) replayed through ``serving.engine`` twice:
+   gang-scheduled static batching (admit only into an empty batch, drain to
+   the slowest member) vs in-flight continuous batching (finished slots are
+   re-prefilled immediately).  Both modes run the identical compiled
+   programs, so the rows isolate exactly the slot-swapping gain.  Rows are
+   merged into ``benchmarks/BENCH_serving.json`` with a per-arch verdict
+   (tok/s and p99 ratios, steady-state recompile count — must be 0).
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 
 from repro.configs import get_smoke_config
 from repro.models import backbones as bb
 from repro.launch.serve import make_phases, timed_generate
+from repro.serving import ContinuousBatchEngine, poisson_trace
+from repro.telemetry import trace
+
+# One arch per cache layout family: recurrent-state SSM, rolling ring
+# window, dense KV.  Traffic: enough requests that the queue backs up and
+# static batching pays the drain tax.
+SERVE_ARCHS = ("mamba2-1.3b", "gemma2-2b", "glm4-9b")
+N_SLOTS, N_REQUESTS, RATE = 4, 40, 200.0
+PROMPT_RANGE, GEN_RANGE = (8, 32), (4, 48)
+BUCKETS = (8, 16, 24, 32)
+SEED = 0
 
 
-def run():
+def _decode_rows(rng):
     rows = []
-    rng = jax.random.PRNGKey(0)
     for arch in ("mamba2-1.3b", "glm4-9b", "mixtral-8x7b", "gemma2-2b",
                  "zamba2-7b", "whisper-medium"):
         cfg = get_smoke_config(arch)
@@ -41,4 +63,71 @@ def run():
                      "derived": (f"{m['decode_tok_per_sec']:.0f}_decode_tok_s_"
                                  f"{m['prefill_tok_per_sec']:.0f}_prefill_tok_s_"
                                  f"{m['decode_step_ms']:.2f}_ms_per_step")})
+    return rows
+
+
+def _trace():
+    # fresh Request objects per run — engine.run() fills their timestamps
+    return poisson_trace(SEED, N_REQUESTS, RATE,
+                         prompt_len_range=PROMPT_RANGE,
+                         max_tokens_range=GEN_RANGE, vocab=256)
+
+
+def _serving_rows():
+    rows = []
+    tracer = trace.get_tracer()
+    for arch in SERVE_ARCHS:
+        cfg = get_smoke_config(arch)
+        params = bb.init_lm(jax.random.PRNGKey(SEED), cfg)
+        engine = ContinuousBatchEngine(
+            cfg, params, n_slots=N_SLOTS,
+            max_context=PROMPT_RANGE[1] + GEN_RANGE[1] + 1,
+            buckets=BUCKETS, decode_block=4, seed=SEED)
+        engine.watch(tracer)
+        engine.warmup()
+        res = {}
+        for mode in ("static", "continuous"):
+            s = engine.run(_trace(), mode=mode, tracer=tracer)
+            res[mode] = s
+            rows.append({
+                "name": f"serving_{mode}_{arch}",
+                "us_per_call": round(s["mean_latency_s"] * 1e6, 1),
+                "derived": (f"{s['decode_tok_per_sec']:.0f}_decode_tok_s_"
+                            f"p99_{s['p99_latency_s']*1e3:.0f}ms_"
+                            f"occ_{s['slot_occupancy']:.2f}_"
+                            f"recompiles_{s['recompile_events']}")})
+        tok_ratio = (res["continuous"]["decode_tok_per_sec"]
+                     / max(res["static"]["decode_tok_per_sec"], 1e-9))
+        p99_ratio = (res["static"]["p99_latency_s"]
+                     / max(res["continuous"]["p99_latency_s"], 1e-9))
+        wins = tok_ratio > 1.0 and p99_ratio > 1.0
+        rows.append({
+            "name": f"serving_verdict_{arch}",
+            "us_per_call": 0.0,
+            "derived": (f"continuous_wins_{wins}_tok_{tok_ratio:.2f}x_"
+                        f"p99_{p99_ratio:.2f}x")})
+    return rows
+
+
+def _merge_json(rows, path=None):
+    """Merge (not overwrite) rows into BENCH_serving.json, preserving keys
+    from other runs — same convention as bench_replay/bench_samplers."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_serving.json")
+    out = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            out = json.load(fh)
+    for r in rows:
+        out[r["name"]] = {"us_per_call": r["us_per_call"],
+                          "derived": r["derived"]}
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    rows = _decode_rows(rng) + _serving_rows()
+    _merge_json(rows)
     return rows

@@ -488,9 +488,15 @@ def _moe_layer_decode(p, x, ck, cv, lengths, cfg, *, window=None):
     return x + m, nk, nv
 
 
-def decode_step(params, cache, tokens, cfg: ModelConfig):
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, active=None):
     """One decode token for the whole batch.  tokens:(B,) int32.
-    Returns (hidden (B,1,D), new_cache)."""
+    Returns (hidden (B,1,D), new_cache).
+
+    ``active`` ((B,) bool, optional) is the continuous-batching slot mask:
+    retired slots keep stepping (the program stays shape-stable, so zero
+    recompilation) but their ``lengths`` are NOT bumped — their outputs are
+    dead and their cache slot is fully overwritten on the next
+    ``write_prefill_at`` (serving/slots.py) before reuse."""
     B = tokens.shape[0]
     lengths = cache["lengths"]
     x = embed(params, tokens[:, None], cfg)
@@ -616,7 +622,8 @@ def decode_step(params, cache, tokens, cfg: ModelConfig):
     else:
         raise ValueError(f)
 
-    new_cache["lengths"] = lengths + 1
+    bump = jnp.ones((B,), jnp.int32) if active is None else active.astype(jnp.int32)
+    new_cache["lengths"] = lengths + bump
     x = rmsnorm(params["final_norm"], x)
     return x, new_cache
 

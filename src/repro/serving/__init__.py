@@ -1,0 +1,25 @@
+"""Serving subsystem: continuous (in-flight) batching over the backbone zoo.
+
+Layers (host logic down, device programs up):
+
+- ``workload``:  Poisson arrival traces of mixed-length requests.
+- ``scheduler``: FCFS admission-controlled queue + slot bookkeeping.
+- ``slots``:     SlotCache — bucketed single-prompt prefill, exact tail
+                 advance, jitted slot surgery over ``models/backbones``.
+- ``engine``:    ContinuousBatchEngine — the shape-stable decode-block loop
+                 that swaps finished sequences for waiting prompts every
+                 block, with a lockstep ``mode="static"`` baseline.
+
+Entry points: ``launch/serve.py --continuous`` (driver + telemetry),
+``benchmarks/bench_serving.py`` (static-vs-continuous comparison).
+"""
+from .engine import ContinuousBatchEngine, make_decode_block
+from .scheduler import Scheduler
+from .slots import DEFAULT_BUCKETS, SlotCache, bucket_for
+from .workload import Request, poisson_trace, summarize_requests
+
+__all__ = [
+    "ContinuousBatchEngine", "make_decode_block", "Scheduler", "SlotCache",
+    "DEFAULT_BUCKETS", "bucket_for", "Request", "poisson_trace",
+    "summarize_requests",
+]

@@ -1,0 +1,216 @@
+"""Continuous-batching serving correctness.
+
+The load-bearing invariant: slot surgery is invisible.  A slot that
+retired a sequence and was re-prefilled with a new prompt must decode
+bit-identically to a fresh batch holding only that prompt — across dense
+KV (glm4), rolling ring-window (gemma2), and Mamba-2 recurrent-state
+layouts.  Plus: the scheduler is FCFS with no starvation under a full
+queue, the active mask freezes retired slots' lengths, and static vs
+continuous scheduling emit identical greedy tokens per request (they run
+the same compiled programs — only admission differs)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import backbones as bb
+from repro.serving import (ContinuousBatchEngine, Request, Scheduler,
+                           SlotCache, bucket_for, make_decode_block,
+                           poisson_trace, summarize_requests)
+
+MAX_CONTEXT = 40
+
+
+def _params(cfg, seed=0):
+    return bb.init_lm(jax.random.PRNGKey(seed), cfg)
+
+
+def _prompt(rng, n, vocab):
+    return rng.randint(0, vocab, size=(n,)).astype(np.int32)
+
+
+def _greedy_blocks(cfg, params, slots, active, remaining, n_blocks, block=4):
+    """Run ``n_blocks`` greedy decode blocks over ``slots`` in place;
+    returns the (n_blocks*block, n_slots) token matrix."""
+    dec = make_decode_block(cfg, block, 0.0, None)
+    logits, cache = slots.logits, slots.cache
+    act = jnp.asarray(np.asarray(active, bool))
+    rem = jnp.asarray(np.asarray(remaining, np.int32))
+    rng = jax.random.PRNGKey(0)
+    out = []
+    for _ in range(n_blocks):
+        rng, k = jax.random.split(rng)
+        logits, cache, act, rem, toks, _ = dec(params, logits, cache,
+                                               act, rem, k)
+        out.append(np.asarray(toks))
+    slots.logits, slots.cache = logits, cache
+    return np.concatenate(out, axis=0)
+
+
+def test_bucket_for():
+    assert bucket_for(8, (8, 16)) == 8
+    assert bucket_for(15, (8, 16)) == 8
+    assert bucket_for(16, (8, 16)) == 16
+    assert bucket_for(100, (8, 16)) == 16
+    with pytest.raises(ValueError):
+        bucket_for(7, (8, 16))
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "gemma2-2b", "mamba2-1.3b"])
+def test_slot_reuse_bit_identity(arch):
+    """Retire a slot, re-prefill it: decode must equal a fresh batch that
+    only ever saw the new request (dense / ring-window / SSM layouts)."""
+    cfg = get_smoke_config(arch)
+    params = _params(cfg)
+    rng = np.random.RandomState(1)
+    p_a, p_b, p_c = (_prompt(rng, n, cfg.vocab) for n in (11, 9, 13))
+
+    slots = SlotCache(cfg, 2, MAX_CONTEXT, buckets=(8,))
+    slots.write_prefill_at(params, 0, p_a)
+    slots.write_prefill_at(params, 1, p_b)
+    # serve a first generation on both slots; slot 0 retires in-scan (budget
+    # 8 < 12 emitted positions) while slot 1 keeps going
+    _greedy_blocks(cfg, params, slots, [True, True], [8, 12], n_blocks=3)
+
+    # slot surgery: retire 0, install the new request
+    slots.reset_slot(0)
+    slots.write_prefill_at(params, 0, p_c)
+    reused = _greedy_blocks(cfg, params, slots, [True, False], [12, 0],
+                            n_blocks=3)[:, 0]
+
+    fresh_slots = SlotCache(cfg, 2, MAX_CONTEXT, buckets=(8,))
+    fresh_slots.write_prefill_at(params, 0, p_c)
+    fresh = _greedy_blocks(cfg, params, fresh_slots, [True, False], [12, 0],
+                           n_blocks=3)[:, 0]
+    np.testing.assert_array_equal(reused, fresh)
+
+
+def test_write_prefill_matches_batch_prefill():
+    """Bucketed single-prompt prefill + exact tail advance lands the same
+    next-token logits as a full-prompt batched prefill."""
+    cfg = get_smoke_config("glm4-9b")
+    params = _params(cfg)
+    rng = np.random.RandomState(2)
+    prompt = _prompt(rng, 13, cfg.vocab)  # bucket 8 + 5 teacher-forced steps
+
+    slots = SlotCache(cfg, 2, MAX_CONTEXT, buckets=(8,))
+    slots.write_prefill_at(params, 1, prompt)
+
+    cache = bb.init_cache(cfg, 1, MAX_CONTEXT)
+    hidden, cache = bb.prefill(params, jnp.asarray(prompt[None]), cfg, cache)
+    ref = np.asarray(bb.lm_logits(params, hidden, cfg)[:, -1],
+                     np.float32)[0]
+    got = np.asarray(slots.logits)[1]
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-4)
+    assert slots.lengths()[1] == 13 and slots.lengths()[0] == 0
+
+
+def test_decode_step_active_mask_freezes_lengths():
+    cfg = get_smoke_config("glm4-9b")
+    params = _params(cfg)
+    cache = bb.init_cache(cfg, 2, 20)
+    toks = jnp.zeros((2, 5), jnp.int32)
+    _, cache = bb.prefill(params, toks, cfg, cache)
+    l0 = np.asarray(cache["lengths"]).copy()
+    _, cache = bb.decode_step(params, cache, jnp.zeros((2,), jnp.int32), cfg,
+                              active=jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(cache["lengths"]),
+                                  l0 + np.asarray([1, 0]))
+
+
+def test_scheduler_fcfs_no_starvation():
+    """A saturated queue rejects overflow but every accepted request is
+    admitted exactly once, in submission order — no starvation."""
+    sched = Scheduler(2, max_queue=3)
+    reqs = [Request(rid=i, prompt=np.zeros(1, np.int32), max_tokens=1,
+                    arrival_s=0.0) for i in range(20)]
+    accepted = []
+    i = 0
+    inflight = []
+    while i < len(reqs) or sched.n_waiting or inflight:
+        for _ in range(5):  # bursty submission overruns the admission cap
+            if i < len(reqs):
+                if sched.submit(reqs[i]):
+                    accepted.append(reqs[i].rid)
+                i += 1
+        while (pair := sched.admit()) is not None:
+            inflight.append(pair[1])
+        while inflight:
+            sched.release(inflight.pop())
+    assert sched.n_rejected > 0
+    assert sched.n_rejected + len(accepted) == len(reqs)
+    assert sched.admitted_order == accepted
+    assert sched.admitted_order == sorted(sched.admitted_order)
+
+
+def test_poisson_trace_deterministic():
+    a = poisson_trace(7, 8, 50.0, prompt_len_range=(8, 16),
+                      max_tokens_range=(4, 12), vocab=97)
+    b = poisson_trace(7, 8, 50.0, prompt_len_range=(8, 16),
+                      max_tokens_range=(4, 12), vocab=97)
+    for ra, rb in zip(a, b):
+        assert ra.arrival_s == rb.arrival_s
+        assert ra.max_tokens == rb.max_tokens
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+    assert all(8 <= r.prompt_len <= 16 for r in a)
+    assert all(4 <= r.max_tokens <= 12 for r in a)
+
+
+def _run_engine(engine, mode, seed=3, n=10):
+    reqs = poisson_trace(seed, n, 100.0, prompt_len_range=(8, 20),
+                         max_tokens_range=(4, 14), vocab=engine.cfg.vocab)
+    summary = engine.run(reqs, mode=mode, realtime=False)
+    return reqs, summary
+
+
+def test_engine_continuous_vs_static_token_identity():
+    """Greedy tokens per request are identical under both scheduling modes
+    (same compiled programs, different admission) — and every request
+    finishes with exactly its max_tokens budget (no EOS configured)."""
+    cfg = get_smoke_config("glm4-9b")
+    engine = ContinuousBatchEngine(cfg, _params(cfg), n_slots=3,
+                                   max_context=36, buckets=(8, 16),
+                                   decode_block=4)
+    engine.warmup()
+    cont, s_cont = _run_engine(engine, "continuous")
+    stat, s_stat = _run_engine(engine, "static")
+    assert s_cont["n_finished"] == s_stat["n_finished"] == len(cont)
+    for rc, rs in zip(cont, stat):
+        assert rc.n_generated == rc.max_tokens
+        np.testing.assert_array_equal(rc.tokens, rs.tokens)
+    assert s_cont["n_rejected"] == 0
+    assert s_cont["generated_tokens"] == sum(r.max_tokens for r in cont)
+    summ = summarize_requests(cont)
+    assert summ["p99_latency_s"] >= summ["p50_latency_s"] > 0
+
+
+def test_engine_eos_retires_early():
+    """With every token forced to the EOS id (vocab-1 via argmax is not
+    controllable, so use a 1-token generation budget check instead): a
+    request whose first sampled token equals eos_id retires with 1 token."""
+    cfg = get_smoke_config("glm4-9b")
+    params = _params(cfg)
+    engine = ContinuousBatchEngine(cfg, params, n_slots=2, max_context=36,
+                                   buckets=(8,), decode_block=2)
+    engine.warmup()
+    reqs = poisson_trace(5, 4, 100.0, prompt_len_range=(8, 12),
+                         max_tokens_range=(6, 6), vocab=cfg.vocab)
+    engine.run(reqs, mode="continuous", realtime=False)
+    first_toks = {r.rid: int(r.tokens[0]) for r in reqs}
+
+    # rerun with eos_id = the greedy first token of request 0: that request
+    # must retire after exactly 1 token; others only if they emit it too
+    eos = first_toks[0]
+    engine2 = ContinuousBatchEngine(cfg, params, n_slots=2, max_context=36,
+                                    buckets=(8,), decode_block=2, eos_id=eos)
+    engine2.warmup()
+    reqs2 = poisson_trace(5, 4, 100.0, prompt_len_range=(8, 12),
+                          max_tokens_range=(6, 6), vocab=cfg.vocab)
+    engine2.run(reqs2, mode="continuous", realtime=False)
+    assert reqs2[0].n_generated == 1
+    for r in reqs2:
+        assert r.t_finished is not None
+        assert r.n_generated <= 6
