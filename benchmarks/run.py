@@ -8,6 +8,7 @@
   §Perf GAE lowering       -> bench_gae
   Kernel roofline gate     -> bench_kernels (BENCH_kernels.json)
   Sentinel overhead gate   -> bench_telemetry (BENCH_telemetry.json)
+  §2.3 async vs sync SPS   -> bench_async (BENCH_async.json)
 
 Roofline terms come from the dry-run (benchmarks/dryrun_results/ via
 python -m repro.launch.dryrun), not from CPU wall time.
@@ -22,11 +23,13 @@ import traceback
 
 def main() -> None:
     from . import (bench_samplers, bench_replay, bench_gae, bench_serving,
-                   bench_learning, bench_r2d1, bench_kernels, bench_telemetry)
+                   bench_learning, bench_r2d1, bench_kernels, bench_telemetry,
+                   bench_async)
     mods = [("samplers", bench_samplers), ("replay", bench_replay),
             ("gae", bench_gae), ("serving", bench_serving),
             ("learning", bench_learning), ("r2d1", bench_r2d1),
-            ("kernels", bench_kernels), ("telemetry", bench_telemetry)]
+            ("kernels", bench_kernels), ("telemetry", bench_telemetry),
+            ("async", bench_async)]
     if len(sys.argv) > 1:
         only = set(sys.argv[1:])
         mods = [(n, m) for n, m in mods if n in only]

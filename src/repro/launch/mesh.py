@@ -37,6 +37,24 @@ def make_data_mesh(n_data: int = 0, axis: str = "data"):
     return jax.make_mesh((n,), (axis,))
 
 
+def split_actor_learner(devices=None):
+    """Disjoint device sets for the decoupled async runner (paper §2.3).
+
+    Returns ``(actor_device, learner_device)``.  On a multi-device host the
+    learner pins to device 0 and the actor to the LAST device, so the two
+    compiled programs (rollout and update) never contend for a compute
+    stream; remaining devices stay free for a future sharded learner.  On a
+    single-device host both share device 0 — the runner then relies on
+    donated update buffers plus async dispatch to interleave the streams.
+    """
+    devs = list(devices) if devices is not None else list(jax.local_devices())
+    if not devs:
+        raise ValueError("no devices available")
+    if len(devs) == 1:
+        return devs[0], devs[0]
+    return devs[-1], devs[0]
+
+
 def install(mesh):
     """Register mesh with the sharding-rule module (dp/tp axis names)."""
     if mesh is None:

@@ -29,6 +29,18 @@ def _np(x):
     return np.asarray(x)
 
 
+def _flat_state(tree, prefix: str) -> dict:
+    """Pytree leaves -> {prefix_i: array} (np.savez-able checkpoint form)."""
+    return {f"{prefix}{i}": np.asarray(leaf)
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(tree))}
+
+
+def _load_flat_state(tree, d, prefix: str):
+    """Inverse of ``_flat_state``: copy arrays back into the live leaves."""
+    for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+        leaf[...] = d[f"{prefix}{i}"]
+
+
 class BaseReplayBuffer:
     """Ring over time dim: storage leaves are (T_size, B, ...)."""
 
@@ -117,6 +129,20 @@ class BaseReplayBuffer:
         batch["indices"] = (t_idx, b_idx)
         return batch
 
+    # -- checkpointing (async restore rehydrates the host buffer) ----------
+    def state_dict(self) -> dict:
+        d = {"t": np.int64(self.t), "filled": np.int64(self.filled)}
+        d.update(_flat_state(self.samples, "samples_"))
+        if self.store_next_obs:
+            d.update(_flat_state(self.next_obs, "next_obs_"))
+        return d
+
+    def load_state_dict(self, d):
+        self.t, self.filled = int(d["t"]), int(d["filled"])
+        _load_flat_state(self.samples, d, "samples_")
+        if self.store_next_obs:
+            _load_flat_state(self.next_obs, d, "next_obs_")
+
 
 class UniformReplayBuffer(BaseReplayBuffer):
     pass
@@ -164,6 +190,15 @@ class PrioritizedReplayBuffer(BaseReplayBuffer):
     def update_priorities(self, flat_idx, td_errors):
         pr = (np.abs(_np(td_errors)) + self.eps) ** self.alpha
         self.tree.set(flat_idx, pr)
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["tree"] = self.tree.tree.copy()
+        return d
+
+    def load_state_dict(self, d):
+        super().load_state_dict(d)
+        self.tree.tree[...] = d["tree"]
 
 
 class SequenceReplayBuffer:
@@ -260,6 +295,20 @@ class SequenceReplayBuffer:
         valid = self._valid_slots()[slot]
         self.tree.set(flat_idx, np.where(valid, pr, 0.0))
 
+    def state_dict(self) -> dict:
+        d = {"t": np.int64(self.t), "filled": np.int64(self.filled),
+             "slot_pr": self.slot_pr.copy()}
+        d.update(_flat_state(self.samples, "samples_"))
+        d.update(_flat_state(self.states, "states_"))
+        return d
+
+    def load_state_dict(self, d):
+        self.t, self.filled = int(d["t"]), int(d["filled"])
+        self.slot_pr[...] = d["slot_pr"]
+        _load_flat_state(self.samples, d, "samples_")
+        _load_flat_state(self.states, d, "states_")
+        self._refresh_tree()  # sum tree is derived from slot_pr + validity
+
 
 class FrameReplayBuffer(BaseReplayBuffer):
     """Frame-based buffer (paper §1.1): stores each unique frame once; the
@@ -308,3 +357,14 @@ class FrameReplayBuffer(BaseReplayBuffer):
         batch["is_weights"] = np.ones(batch_size, np.float32)
         batch["indices"] = (t_idx, b_idx)
         return batch
+
+    def state_dict(self) -> dict:
+        d = super().state_dict()
+        d["ep_id"] = self.ep_id.copy()
+        d["ep_counter"] = self._ep_counter.copy()
+        return d
+
+    def load_state_dict(self, d):
+        super().load_state_dict(d)
+        self.ep_id[...] = d["ep_id"]
+        self._ep_counter[...] = d["ep_counter"]

@@ -18,6 +18,7 @@ storage layout — and return ``(sample, indices, is_weights)`` from
 """
 from __future__ import annotations
 
+import threading
 from typing import Any
 
 import numpy as np
@@ -215,3 +216,40 @@ class HostSequenceReplay(ReplayLike):
                                 np.asarray(jax.device_get(td_max)),
                                 np.asarray(jax.device_get(td_mean)))
         return state
+
+
+class LockedReplay(ReplayLike):
+    """Concurrent-safe view over a host ReplayLike (the async memory-copier
+    hand-off, paper §2.3): one RLock serializes insert / sample /
+    update_priorities so the copier thread can append while the learner
+    samples.  The lock guards only the host-side numpy mutation — callers
+    should materialize device batches (``host_tree``) BEFORE insert so no
+    device wait ever happens under the lock.
+    """
+
+    device_resident = False
+
+    def __init__(self, inner: ReplayLike):
+        assert not inner.device_resident, "LockedReplay wraps host backends"
+        self.inner = inner
+        self.lock = threading.RLock()
+
+    @property
+    def buffer(self):
+        return self.inner.buffer
+
+    def init(self, example=None):
+        with self.lock:
+            return self.inner.init(example)
+
+    def insert(self, state, rollout, **extras):
+        with self.lock:
+            return self.inner.insert(state, rollout, **extras)
+
+    def sample(self, state, rng, batch_size: int):
+        with self.lock:
+            return self.inner.sample(state, rng, batch_size)
+
+    def update_priorities(self, state, indices, *priorities):
+        with self.lock:
+            return self.inner.update_priorities(state, indices, *priorities)

@@ -1,29 +1,52 @@
-"""Asynchronous sampling/optimization (paper §2.3, Fig. 3) — TPU adaptation.
+"""Decoupled asynchronous sampling/optimization (paper §2.3, Fig. 3).
 
-rlpyt runs sampler and optimizer in separate processes around a shared-memory
-replay buffer with a double buffer + memory-copier + read/write lock.  Here
-the sampler's compiled rollout and the optimizer's compiled update are
-independent device programs; a host ``ReplayLike`` backend
-(replay/interface.py wrapping replay/host.py) plays the shared-memory buffer,
-and JAX's async dispatch gives the overlap: while the device executes
-collect/update, the host thread copies the previous batch into the ring (the
-memory-copier role) — no locks needed in a single-controller process.
+rlpyt's asynchronous mode runs sampler and optimizer concurrently around a
+double-buffered shared-memory replay with a memory-copier and a read/write
+lock.  This runner reproduces that topology with threads around two
+independent compiled programs:
 
-The runner is replay-backend- and algorithm-agnostic: batches reach the
-algorithm through its declarative BatchSpec (``make_algo_batch``), identical
-to the synchronous TrainLoop path.
+- **actor thread**: the sampler's jitted rollout free-runs against the most
+  recently PUBLISHED parameters, materializes each batch to host memory (the
+  memory-copier role) and hands it into a ``_DoubleBuffer`` — an explicit
+  N-slot (default 2) write/read ping-pong with back-pressure, rather than a
+  lock around one shared ring.
+- **copier thread** (replayed modes): drains the double buffer into the host
+  ``ReplayLike`` backend behind a ``LockedReplay`` view, so inserts and the
+  learner's sampling interleave safely.
+- **learner** (main thread): consumes batches continuously, throttled so
+  consumption/generation never exceeds ``replay_ratio`` (paper: "the
+  optimizer will be throttled not to exceed this value"), and publishes
+  parameters every ``publish_interval`` updates through a versioned
+  ``_ParamBus`` — so ``param_staleness`` (learner updates behind the batch's
+  behavior policy) is measurable, not implicit.
 
-The paper's control knobs are kept exactly:
-- ``replay_ratio``: consumption/generation rate; the optimizer throttles when
-  ahead (paper: "the optimizer will be throttled not to exceed this value").
-- actor parameter refresh each sampler batch (all actors share params).
+On multi-device hosts the two programs pin to disjoint devices via
+``launch.mesh.split_actor_learner``; on one device the learner's update
+donates its input buffers so actor dispatch interleaves with update compute.
 
-Modes: transition replay (DQN/QPG) and sequence replay (R2D1) with periodic
-recurrent-state storage and R2D2 priority updates.
+Off-policy correction: with a publication cadence the actor's rollouts come
+from stale parameters, which breaks the on-policy families.  For
+rollout-mode algorithms (A2C/PPO) the learner applies a V-trace-style
+importance-truncation correction (train/vtrace.py) through the BatchSpec
+extras seam — the corrected targets enter as a rewritten ``reward`` series,
+so no algorithm's update signature changes.  DQN/QPG families are off-policy
+already and reuse their existing replay semantics.
+
+``threaded=False`` degrades to a deterministic lockstep schedule (collect ->
+insert -> throttled updates per iteration, the seed-era behavior) used by
+the staleness-0 equivalence tests; both schedules share ONE run loop,
+including checkpoint/restore (which rehydrates the host buffer from the
+``replay_*.npz`` sidecar, or re-enforces ``min_replay`` warmup with a
+warning when the sidecar is missing).
 """
 from __future__ import annotations
 
+import contextlib
+import os
+import threading
 import time
+import warnings
+from collections import deque
 from typing import Optional
 
 import numpy as np
@@ -31,9 +54,12 @@ import jax
 import jax.numpy as jnp
 
 from ..core.batch_spec import make_algo_batch
+from ..launch.mesh import split_actor_learner
 from ..replay.host import SequenceReplayBuffer
-from ..replay.interface import (HostSequenceReplay, HostTransitionReplay)
+from ..replay.interface import (HostSequenceReplay, HostTransitionReplay,
+                                LockedReplay, host_tree)
 from ..telemetry import trace
+from ..train import vtrace as vtrace_lib
 from ..train.checkpoint import save_checkpoint, restore_checkpoint, latest_step
 from ..utils.logger import Logger
 
@@ -44,17 +70,108 @@ def _device_tree(x):
     return jax.tree_util.tree_map(jnp.asarray, x)
 
 
-class AsyncRunner:
-    """Transition-mode async runner (DQN variants, DDPG/TD3/SAC)."""
+class _DoubleBuffer:
+    """N-slot host hand-off between actor and consumer (paper's double
+    buffer).  ``put`` blocks when all slots are written (back-pressure on the
+    actor); ``get`` returns the oldest slot.  Wait times and depth are
+    tracked for the idle-fraction/occupancy telemetry."""
 
-    def __init__(self, sampler, algo, buffer, *, batch_size: int,
+    def __init__(self, n_slots: int = 2):
+        self.n_slots = n_slots
+        self._slots = deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self.put_wait_s = 0.0
+        self.get_wait_s = 0.0
+        self.puts = 0
+        self.gets = 0
+        self._depth_sum = 0
+        self._depth_obs = 0
+
+    def put(self, item) -> bool:
+        t0 = time.perf_counter()
+        with self._cv:
+            while len(self._slots) >= self.n_slots and not self._closed:
+                self._cv.wait(0.05)
+            if self._closed:
+                return False
+            self._slots.append(item)
+            self.puts += 1
+            self._depth_sum += len(self._slots)
+            self._depth_obs += 1
+            self._cv.notify_all()
+        self.put_wait_s += time.perf_counter() - t0
+        return True
+
+    def get(self, timeout: float = 0.05):
+        t0 = time.perf_counter()
+        with self._cv:
+            if not self._slots and not self._closed:
+                self._cv.wait(timeout)
+            item = self._slots.popleft() if self._slots else None
+            if item is not None:
+                self.gets += 1
+                self._cv.notify_all()
+        self.get_wait_s += time.perf_counter() - t0
+        return item
+
+    def close(self):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def depth(self) -> int:
+        return len(self._slots)
+
+    def occupancy(self) -> float:
+        """Mean fraction of slots written, observed at each put."""
+        return self._depth_sum / max(self._depth_obs, 1) / self.n_slots
+
+
+class _ParamBus:
+    """Versioned parameter publication from learner to actor.  ``version``
+    counts publishes; ``updates`` stamps the learner-update count at publish
+    time so staleness is measured in optimizer updates."""
+
+    def __init__(self, params):
+        self._lock = threading.Lock()
+        self._params = params
+        self.version = 0
+        self.updates = 0
+
+    def publish(self, params, updates: int):
+        with self._lock:
+            self._params = params
+            self.updates = updates
+            self.version += 1
+
+    def read(self):
+        with self._lock:
+            return self.version, self.updates, self._params
+
+
+class AsyncRunner:
+    """Transition-mode (DQN/QPG) and rollout-mode (A2C/PPO via V-trace)
+    decoupled actor/learner; mode follows ``algo.batch_spec.mode``."""
+
+    def __init__(self, sampler, algo, buffer=None, *, batch_size: int = None,
                  replay_ratio: float = 1.0, min_replay: int = 1000,
                  n_iterations: int = 100, log_interval: int = 10,
                  logger: Optional[Logger] = None,
                  ckpt_dir: Optional[str] = None, ckpt_interval: int = 0,
-                 agent_state_kwargs: Optional[dict] = None):
+                 agent_state_kwargs: Optional[dict] = None,
+                 threaded: bool = True, publish_interval: int = 1,
+                 use_vtrace: Optional[bool] = None,
+                 rho_bar: float = 1.0, c_bar: float = 1.0,
+                 devices=None, db_slots: int = 2, drain: bool = False):
         self.sampler, self.algo, self.buffer = sampler, algo, buffer
-        self.replay = self._make_replay(buffer)
+        self.mode = algo.batch_spec.mode
+        if self.mode == "rollout":
+            assert buffer is None, "rollout mode consumes the double buffer"
+            self.replay = None
+        else:
+            assert buffer is not None and batch_size is not None
+            self.replay = LockedReplay(self._make_replay(buffer))
         self.batch_size = batch_size
         self.replay_ratio = replay_ratio
         self.min_replay = min_replay
@@ -63,18 +180,63 @@ class AsyncRunner:
         self.logger = logger or Logger()
         self.ckpt_dir, self.ckpt_interval = ckpt_dir, ckpt_interval
         self.agent_state_kwargs = agent_state_kwargs or {}
+        self.threaded = threaded
+        self.publish_interval = max(int(publish_interval), 1)
+        self.use_vtrace = (self.mode == "rollout") if use_vtrace is None \
+            else use_vtrace
+        self.rho_bar, self.c_bar = rho_bar, c_bar
+        self.db_slots = db_slots
+        self.drain = drain
+        self.actor_device, self.learner_device = split_actor_learner(devices)
+        self.steps_per_iter = sampler.horizon * sampler.n_envs
+        self._samples_per_update = (self.steps_per_iter if self.mode ==
+                                    "rollout" else self._consumed_per_update())
+
         self._collect = jax.jit(self.sampler.collect)
-        self._update = jax.jit(self.algo.update)
+        if self.mode == "rollout":
+            self._update = jax.jit(self._rollout_update_impl, donate_argnums=0)
+        else:
+            self._update = jax.jit(self.algo.update, donate_argnums=0)
         self._rng_np = np.random.default_rng(0)
         self.tracer = trace.get_tracer()
         # the decoupled actor/learner programs are exactly the entry points
         # whose silent retracing would serialize the async overlap
         self.tracer.watch_jit("async.collect", self._collect)
         self.tracer.watch_jit("async.update", self._update)
+        self.recompile_events = 0     # steady-state (post-first-window) count
+        self.stats = {}               # filled at end of run()
 
+    # -- mode hooks (overridden by AsyncR2D1Runner) ------------------------
     @staticmethod
     def _make_replay(buffer):
         return HostTransitionReplay(buffer)
+
+    def _consumed_per_update(self) -> int:
+        return self.batch_size
+
+    def _collect_extras(self) -> dict:
+        """Per-collect side data captured BEFORE the rollout (e.g. the R2D1
+        stored recurrent state); inserted alongside the batch."""
+        return {}
+
+    def _replay_ready(self) -> bool:
+        return len(self.buffer) >= self.min_replay
+
+    # -- compiled learner programs -----------------------------------------
+    def _rollout_update_impl(self, train_state, rollout, boot, rng):
+        """On-policy-family update on a (possibly stale) actor rollout:
+        bootstrap + V-trace correction under CURRENT learner params, then the
+        algorithm's unmodified update through its BatchSpec."""
+        obs, prev_action, prev_reward, agent_state = boot
+        bootstrap_value = self.sampler.agent.value(
+            train_state.params, obs, prev_action, prev_reward, agent_state)
+        extras = {"bootstrap_value": bootstrap_value}
+        if self.use_vtrace:
+            extras.update(vtrace_lib.vtrace_extras(
+                self.algo, train_state.params, rollout, bootstrap_value,
+                rho_bar=self.rho_bar, c_bar=self.c_bar))
+        batch = make_algo_batch(self.algo.batch_spec, rollout, extras)
+        return self.algo.update(train_state, batch, rng)
 
     def _optimize(self, train_state, replay_state, rng):
         """One throttled optimizer turn: sample -> BatchSpec adapter ->
@@ -89,65 +251,349 @@ class AsyncRunner:
             replay_state, idx, *(info.extra[k] for k in spec.priority_keys))
         return train_state, info
 
+    # -- actor side --------------------------------------------------------
+    def _actor_step(self, it: int):
+        """One collect against published params; returns the host item for
+        the double buffer and the wall time spent actively producing it."""
+        version, behavior_updates, params = self._bus.read()
+        if self.actor_device is not self.learner_device:
+            params = jax.device_put(params, self.actor_device)
+        extras = self._collect_extras()
+        t0 = time.perf_counter()
+        with self.tracer.span("async.collect", iteration=it):
+            self._sampler_state, batch = self._collect(params,
+                                                       self._sampler_state)
+            item = {"it": it, "version": version,
+                    "behavior_updates": behavior_updates,
+                    "batch": host_tree(batch), "extras": extras}
+            if self.mode == "rollout":
+                s = self._sampler_state
+                item["boot"] = host_tree((s.obs, s.prev_action,
+                                          s.prev_reward, s.agent_state))
+        return item, time.perf_counter() - t0
+
+    def _actor_loop(self, start_iter: int):
+        try:
+            for it in range(start_iter, self.n_iterations):
+                item, busy = self._actor_step(it)
+                self._actor_busy_s += busy
+                if not self._db.put(item):
+                    return
+        except BaseException as e:   # surface in the learner thread
+            self._actor_error = e
+            self._db.close()
+        finally:
+            self._actor_done.set()
+
+    # -- copier side (replayed modes) --------------------------------------
+    def _insert_item(self, item):
+        with self.tracer.span("async.insert", iteration=item["it"]):
+            self.replay.insert(self._replay_state, item["batch"],
+                               **item["extras"])
+        self._note_generated(item)
+
+    def _copier_loop(self):
+        try:
+            while True:
+                item = self._db.get(timeout=0.05)
+                if item is None:
+                    if self._actor_done.is_set() and self._db.depth() == 0:
+                        return
+                    continue
+                self._insert_item(item)
+        except BaseException as e:
+            self._actor_error = self._actor_error or e
+        finally:
+            self._copier_done.set()
+
+    # -- shared accounting -------------------------------------------------
+    def _note_generated(self, item):
+        with self._count_lock:
+            self._generated += self.steps_per_iter
+            self._iters_done = item["it"] + 1
+            self._staleness_window.append(
+                self._updates_done - item["behavior_updates"])
+
+    def _note_update(self, info):
+        self._last_info = info
+        self._updates_done += 1
+        self._consumed += self._samples_per_update
+        if self._updates_done % self.publish_interval == 0:
+            # publish a HOST copy: the learner's update donates its input
+            # train_state, so device buffers published by reference could be
+            # deleted under the actor between publishes
+            self._bus.publish(host_tree(self._train_state.params),
+                              self._updates_done)
+
+    def _throttle_ok(self) -> bool:
+        return ((self._consumed + self._samples_per_update)
+                / max(self._generated, 1) <= self.replay_ratio)
+
+    # -- run loop (one loop for both runner classes and both schedules) ----
     def run(self, rng, params=None, restore: bool = False):
         k1, k2, k3 = jax.random.split(rng, 3)
         if params is None:
             params = self.sampler.agent.init_params(k1)
         train_state = self.algo.init_train_state(k2, params)
-        sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
-        replay_state = self.replay.init()
+        self._sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
+        if self.actor_device is not self.learner_device:
+            self._sampler_state = jax.device_put(self._sampler_state,
+                                                 self.actor_device)
+        self._replay_state = self.replay.init() if self.replay else None
+
+        self._generated, self._consumed, self._updates_done = 0, 0, 0
         start_iter = 0
         if restore and self.ckpt_dir and latest_step(self.ckpt_dir) is not None:
-            train_state, manifest = restore_checkpoint(self.ckpt_dir, train_state)
-            start_iter = manifest["extra"].get("iteration", 0)
+            train_state, start_iter = self._restore(train_state)
+        # un-alias leaves (e.g. DQN online/target params start as the SAME
+        # buffers) so the learner's donated update never donates one twice
+        self._train_state = jax.tree_util.tree_map(
+            lambda l: jnp.array(l, copy=True), train_state)
+        self._iters_done = start_iter
+        # host copy for the same donation-lifetime reason as in _note_update
+        self._bus = _ParamBus(host_tree(train_state.params))
+        self._db = _DoubleBuffer(self.db_slots)
+        self._staleness_window = []
+        self._last_info = None
+        self._last_stats = {"avg_return": 0.0, "avg_len": 0.0, "episodes": 0.0}
+        self._actor_busy_s = 0.0
+        self._learner_busy_s = 0.0
+        self._learner_idle_s = 0.0
+        self._count_lock = threading.Lock()
+        self._actor_error = None
+        self._actor_done = threading.Event()
+        self._copier_done = threading.Event()
+        self._first_window_seen = False
+        self._last_ckpt = -1
+        L = self.log_interval
+        self._next_log = (start_iter // L + 1) * L
+        self._last_logged_iters = start_iter
+        self._last_log_time = self._run_t0 = time.perf_counter()
 
-        generated, consumed = 0, 0
-        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
-        t0 = time.time()
-        last_info = None
+        if self.threaded:
+            self._run_threaded(rng, start_iter)
+        else:
+            self._run_lockstep(rng, start_iter)
+
+        elapsed = max(time.perf_counter() - self._run_t0, 1e-9)
+        self.stats = {
+            "elapsed_s": elapsed,
+            "samples_per_sec": (self._iters_done - start_iter)
+            * self.steps_per_iter / elapsed,
+            "updates": self._updates_done,
+            "replay_ratio_actual": self._consumed / max(self._generated, 1),
+            "overlap_frac": max(
+                0.0, (self._actor_busy_s + self._learner_busy_s - elapsed)
+                / elapsed),
+            "recompile_events": self.recompile_events,
+            "publish_version": self._bus.version,
+        }
+        return self._train_state, self._sampler_state, self._last_info
+
+    def _run_lockstep(self, rng, start_iter: int):
+        """Seed-era deterministic schedule: collect -> insert -> throttled
+        updates, one iteration at a time (used for equivalence tests)."""
         for it in range(start_iter, self.n_iterations):
             rng, _ = jax.random.split(rng)
-            # sampler turn (actor uses CURRENT params — refresh per batch)
-            with self.tracer.span("async.collect", iteration=it):
-                sampler_state, batch = self._collect(train_state.params,
-                                                     sampler_state)
-            with self.tracer.span("async.insert", iteration=it):
-                replay_state = self.replay.insert(replay_state, batch)
-            generated += steps_per_iter
+            item, busy = self._actor_step(it)
+            self._actor_busy_s += busy
+            if self.mode == "rollout":
+                self._note_generated(item)
+                rng, k = jax.random.split(rng)
+                self._learner_consume_rollout(item, k)
+            else:
+                self._insert_item(item)
+                with self.tracer.span("async.optimize", iteration=it):
+                    while self._replay_ready() and self._throttle_ok():
+                        rng, k = jax.random.split(rng)
+                        self._learner_update_replayed(k)
+            self._boundaries()
 
-            # optimizer turn: throttle to replay_ratio
-            with self.tracer.span("async.optimize", iteration=it):
-                while (len(self.buffer) >= self.min_replay and
-                       (consumed + self.batch_size) / max(generated, 1)
-                       <= self.replay_ratio):
-                    rng, k = jax.random.split(rng)
-                    train_state, info = self._optimize(train_state,
-                                                       replay_state, k)
-                    last_info = info
-                    consumed += self.batch_size
+    def _run_threaded(self, rng, start_iter: int):
+        actor = threading.Thread(target=self._actor_loop, args=(start_iter,),
+                                 name="async-actor", daemon=True)
+        copier = None
+        if self.mode != "rollout":
+            copier = threading.Thread(target=self._copier_loop,
+                                      name="async-copier", daemon=True)
+        else:
+            self._copier_done.set()
+        actor.start()
+        if copier:
+            copier.start()
+        try:
+            if self.mode == "rollout":
+                self._learner_loop_rollout(rng)
+            else:
+                self._learner_loop_replayed(rng)
+        finally:
+            self._db.close()
+            actor.join(timeout=30.0)
+            if copier:
+                copier.join(timeout=30.0)
+        if self._actor_error is not None:
+            raise self._actor_error
 
-            if (it + 1) % self.log_interval == 0 and last_info is not None:
-                stats = self.sampler.traj_stats(sampler_state)
-                sampler_state = self.sampler.reset_stats(sampler_state)
-                sps = steps_per_iter * self.log_interval / max(
-                    time.time() - t0, 1e-9)
-                t0 = time.time()
-                extra = {k_: v for k_, v in last_info.extra.items()
-                         if jnp.ndim(v) == 0}
-                self.logger.record((it + 1) * steps_per_iter, {
-                    "iter": it + 1, "loss": last_info.loss,
-                    "replay_ratio_actual": consumed / max(generated, 1),
-                    "samples_per_sec": sps,
-                    **{k_: float(v) for k_, v in stats.items()}, **extra})
-                self.tracer.poll_recompiles()
-                self.tracer.memory_snapshot(f"async_log_{it + 1}")
-            if self.ckpt_dir and self.ckpt_interval and \
-                    (it + 1) % self.ckpt_interval == 0:
-                save_checkpoint(self.ckpt_dir, it + 1, train_state,
-                                extra={"iteration": it + 1,
-                                       "buffer_t": self.buffer.t,
-                                       "buffer_filled": self.buffer.filled})
-        return train_state, sampler_state, last_info
+    # -- learner side ------------------------------------------------------
+    def _learner_consume_rollout(self, item, k):
+        t0 = time.perf_counter()
+        with self.tracer.span("async.optimize", iteration=item["it"]):
+            self._train_state, info = self._update(
+                self._train_state, item["batch"], item["boot"], k)
+        self._learner_busy_s += time.perf_counter() - t0
+        self._note_update(info)
+
+    def _learner_update_replayed(self, k):
+        t0 = time.perf_counter()
+        self._train_state, info = self._optimize(self._train_state,
+                                                 self._replay_state, k)
+        self._learner_busy_s += time.perf_counter() - t0
+        self._note_update(info)
+
+    def _learner_loop_rollout(self, rng):
+        """Threaded on-policy family: one V-trace-corrected update per
+        collected rollout, in arrival order."""
+        while True:
+            if self._actor_error is not None:
+                return
+            t0 = time.perf_counter()
+            item = self._db.get(timeout=0.05)
+            if item is None:
+                if self._actor_done.is_set() and self._db.depth() == 0:
+                    return
+                self._learner_idle_s += time.perf_counter() - t0
+                continue
+            self._note_generated(item)
+            rng, k = jax.random.split(rng)
+            self._learner_consume_rollout(item, k)
+            self._boundaries()
+
+    def _learner_loop_replayed(self, rng):
+        """Threaded replayed modes: update whenever the buffer is warm and
+        the replay-ratio throttle allows; otherwise idle briefly."""
+        while True:
+            if self._actor_error is not None:
+                return
+            can = self._replay_ready() and self._throttle_ok()
+            pipeline_done = (self._actor_done.is_set()
+                             and self._copier_done.is_set())
+            if can and (not pipeline_done or self.drain):
+                rng, k = jax.random.split(rng)
+                self._learner_update_replayed(k)
+            elif pipeline_done:
+                break
+            else:
+                time.sleep(0.002)
+                self._learner_idle_s += 0.002
+            self._boundaries()
+
+    # -- logging / checkpoint boundaries -----------------------------------
+    def _traj_window(self):
+        """Per-window trajectory stats from cumulative sampler accumulators
+        (delta-based: no reset, so the learner never races the actor for a
+        write into the sampler state)."""
+        cur = {k: float(v) for k, v in
+               self.sampler.traj_stats(self._sampler_state).items()}
+        n_prev, n_cur = self._last_stats["episodes"], cur["episodes"]
+        dn = n_cur - n_prev
+        out = {"episodes": dn}
+        for key in ("avg_return", "avg_len"):
+            s_cur = cur[key] * max(n_cur, 1.0)
+            s_prev = self._last_stats[key] * max(n_prev, 1.0)
+            out[key] = (s_cur - s_prev) / max(dn, 1.0)
+        self._last_stats = cur
+        return out
+
+    def _boundaries(self):
+        while self._iters_done >= self._next_log:
+            self._log_window(self._next_log)
+            self._next_log += self.log_interval
+        if self.ckpt_dir and self.ckpt_interval:
+            it = self._iters_done
+            if it % self.ckpt_interval == 0 and it > self._last_ckpt:
+                self._last_ckpt = it
+                self._save_ckpt(it)
+
+    def _log_window(self, boundary: int):
+        now = time.perf_counter()
+        dt = max(now - self._last_log_time, 1e-9)
+        d_iters = self._iters_done - self._last_logged_iters
+        sps = d_iters * self.steps_per_iter / dt
+        self._last_log_time = now
+        self._last_logged_iters = self._iters_done
+        with self._count_lock:
+            stale = self._staleness_window
+            self._staleness_window = []
+        elapsed = max(now - self._run_t0, 1e-9)
+        new_compiles = self.tracer.poll_recompiles()
+        if self._first_window_seen:
+            self.recompile_events += new_compiles
+        self._first_window_seen = True
+        info = self._last_info
+        if info is None:      # still warming up the replay: skip the row
+            return
+        extra = {k: float(v) for k, v in info.extra.items()
+                 if jnp.ndim(v) == 0}
+        row = {
+            "iter": boundary, "loss": float(info.loss),
+            "replay_ratio_actual": self._consumed / max(self._generated, 1),
+            "samples_per_sec": sps,
+            "param_staleness_mean": float(np.mean(stale)) if stale else 0.0,
+            "param_staleness_max": float(np.max(stale)) if stale else 0.0,
+            "publish_version": self._bus.version,
+            "db_occupancy": self._db.occupancy(),
+            "queue_depth": self._db.depth(),
+            "actor_idle_frac": min(self._db.put_wait_s / elapsed, 1.0),
+            "learner_idle_frac": min(self._learner_idle_s / elapsed, 1.0),
+            "overlap_frac": max(0.0, (self._actor_busy_s +
+                                      self._learner_busy_s - elapsed)
+                                / elapsed),
+            **self._traj_window(), **extra,
+        }
+        self.logger.record(boundary * self.steps_per_iter, row)
+        self.tracer.memory_snapshot(f"async_log_{boundary}")
+
+    # -- checkpoint / restore ----------------------------------------------
+    def _replay_path(self, step: int) -> str:
+        return os.path.join(self.ckpt_dir, f"replay_{step:08d}.npz")
+
+    def _save_ckpt(self, it: int):
+        extra = {"iteration": it, "generated": self._generated,
+                 "consumed": self._consumed, "updates": self._updates_done,
+                 "publish_version": self._bus.version}
+        os.makedirs(self.ckpt_dir, exist_ok=True)
+        if self.buffer is not None:
+            extra["buffer_t"] = self.buffer.t
+            extra["buffer_filled"] = self.buffer.filled
+            lock = self.replay.lock if self.replay else contextlib.nullcontext()
+            with lock:
+                state = self.buffer.state_dict()
+            tmp = self._replay_path(it) + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, **state)
+            os.replace(tmp, self._replay_path(it))
+        save_checkpoint(self.ckpt_dir, it, self._train_state, extra=extra)
+
+    def _restore(self, train_state):
+        step = latest_step(self.ckpt_dir)
+        train_state, manifest = restore_checkpoint(self.ckpt_dir, train_state)
+        extra = manifest["extra"]
+        start_iter = extra.get("iteration", 0)
+        self._generated = extra.get("generated",
+                                    start_iter * self.steps_per_iter)
+        self._consumed = extra.get("consumed", 0)
+        self._updates_done = extra.get("updates", 0)
+        if self.buffer is not None:
+            path = self._replay_path(step)
+            if os.path.exists(path):
+                with np.load(path) as d:
+                    self.buffer.load_state_dict(d)
+            else:
+                warnings.warn(
+                    "async restore: no replay sidecar at "
+                    f"{path}; resuming with an empty buffer and re-enforcing "
+                    f"the min_replay={self.min_replay} warmup")
+        return train_state, start_iter
 
 
 class AsyncR2D1Runner(AsyncRunner):
@@ -156,6 +602,9 @@ class AsyncR2D1Runner(AsyncRunner):
     The sampler horizon must equal the replay ``state_interval`` so the
     recurrent state captured at batch start is the stored initial state for
     the block (periodic storage).  Priorities update with the R2D2 mixture.
+    Shares the base run loop — threading, throttling, logging, AND
+    checkpoint/restore — differing only in the replay wrapper, the per-update
+    sample accounting (sequences x seq_len), and the stored-state capture.
     """
 
     def __init__(self, sampler, algo, buffer: SequenceReplayBuffer, **kw):
@@ -167,53 +616,16 @@ class AsyncR2D1Runner(AsyncRunner):
     def _make_replay(buffer):
         return HostSequenceReplay(buffer)
 
-    def run(self, rng, params=None, restore: bool = False):
-        k1, k2, k3 = jax.random.split(rng, 3)
-        if params is None:
-            params = self.sampler.agent.init_params(k1)
-        train_state = self.algo.init_train_state(k2, params)
-        sampler_state = self.sampler.init(k3, self.agent_state_kwargs)
-        replay_state = self.replay.init()
+    def _consumed_per_update(self) -> int:
+        return self.batch_size * self.buffer.seq_len
 
-        generated, consumed = 0, 0
-        steps_per_iter = self.sampler.horizon * self.sampler.n_envs
-        t0 = time.time()
-        last_info = None
-        for it in range(self.n_iterations):
-            # recurrent state at block start -> stored with the block
-            init_state = self.sampler.full_agent_state(sampler_state)["lstm"]
-            with self.tracer.span("async.collect", iteration=it):
-                sampler_state, batch = self._collect(train_state.params,
-                                                     sampler_state)
-            with self.tracer.span("async.insert", iteration=it):
-                replay_state = self.replay.insert(replay_state, batch,
-                                                  init_state=init_state)
-            generated += steps_per_iter
+    def _collect_extras(self) -> dict:
+        state = self.sampler.full_agent_state(self._sampler_state)["lstm"]
+        return {"init_state": host_tree(state)}
 
-            with self.tracer.span("async.optimize", iteration=it):
-                while (self.buffer.tree.total > 0 and
-                       len_filled(self.buffer) >= self.min_replay and
-                       (consumed + self.batch_size * self.buffer.seq_len)
-                       / max(generated, 1) <= self.replay_ratio):
-                    rng, k = jax.random.split(rng)
-                    train_state, info = self._optimize(train_state,
-                                                       replay_state, k)
-                    last_info = info
-                    consumed += self.batch_size * self.buffer.seq_len
-
-            if (it + 1) % self.log_interval == 0 and last_info is not None:
-                stats = self.sampler.traj_stats(sampler_state)
-                sampler_state = self.sampler.reset_stats(sampler_state)
-                sps = steps_per_iter * self.log_interval / max(
-                    time.time() - t0, 1e-9)
-                t0 = time.time()
-                self.logger.record((it + 1) * steps_per_iter, {
-                    "iter": it + 1, "loss": last_info.loss,
-                    "replay_ratio_actual": consumed / max(generated, 1),
-                    "samples_per_sec": sps,
-                    **{k_: float(v) for k_, v in stats.items()},
-                    "q_mean": last_info.extra["q_mean"]})
-        return train_state, sampler_state, last_info
+    def _replay_ready(self) -> bool:
+        return (self.buffer.tree.total > 0
+                and len_filled(self.buffer) >= self.min_replay)
 
 
 def len_filled(buffer) -> int:

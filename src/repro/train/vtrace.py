@@ -1,0 +1,120 @@
+"""V-trace off-policy correction (IMPALA; TorchBeast in PAPERS.md) for the
+decoupled async actor/learner (paper §2.3).
+
+When the actor runs ahead of parameter publication, its rollouts were drawn
+from a stale behavior policy mu while the learner optimizes pi.  V-trace
+repairs the value targets with truncated importance weights:
+
+    rho_t = min(pi(a_t|x_t)/mu(a_t|x_t), rho_bar)
+    c_t   = lam * min(pi/mu, c_bar)
+    delta_t = rho_t * (r_t + gamma * nd_t * V(x_{t+1}) - V(x_t))
+    vs_t - V(x_t) = delta_t + gamma * c_t * nd_t * (vs_{t+1} - V(x_{t+1}))
+
+The ``lam`` factor is the standard lambda-V-trace generalization: at
+rho_bar = c_bar = 1 and pi == mu it reduces EXACTLY to GAE(lambda), which is
+what makes the staleness-0 async runner bit-compatible with the synchronous
+path (tests/test_async_rl.py).
+
+Wiring (the BatchSpec seam — no algorithm's update signature changes):
+``vtrace_extras`` computes the corrected advantage series adv*_t = vs_t - v_t
+under the CURRENT learner params, then *inverts the algorithm's own GAE* to a
+rewritten reward series r_hat such that the algorithm's internal
+``gae_scan(r_hat, v, bootstrap, done, gamma, lam)`` reproduces adv* exactly
+(triangular back-substitution, ``gae_inverse``).  The extras dict overrides
+the ``reward`` field through ``make_algo_batch`` — extras take precedence
+over every other field source — so A2C/PPO run unmodified yet optimize the
+V-trace-corrected objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def vtrace(behavior_logp, target_logp, rewards, values, bootstrap_value,
+           done, *, gamma: float = 0.99, lam: float = 1.0,
+           rho_bar: float = 1.0, c_bar: float = 1.0):
+    """Reference V-trace.  All series time-major (T, B); bootstrap (B,).
+
+    Returns ``(vs, pg_adv)``: the corrected value targets and the truncated
+    policy-gradient advantage rho_t * (r_t + gamma*nd*vs_{t+1} - v_t).
+    """
+    ratio = jnp.exp(target_logp - behavior_logp)
+    rho = jnp.minimum(ratio, rho_bar)
+    c = lam * jnp.minimum(ratio, c_bar)
+    nd = 1.0 - done.astype(values.dtype)
+    v_next = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    delta = rho * (rewards + gamma * v_next * nd - values)
+
+    def body(acc, x):
+        delta_t, c_t, nd_t = x
+        acc = delta_t + gamma * c_t * nd_t * acc
+        return acc, acc
+
+    _, adv = jax.lax.scan(body, jnp.zeros_like(bootstrap_value),
+                          (delta, c, nd), reverse=True)
+    vs = adv + values
+    vs_next = jnp.concatenate([vs[1:], bootstrap_value[None]], axis=0)
+    pg_adv = rho * (rewards + gamma * vs_next * nd - values)
+    return vs, pg_adv
+
+
+def vtrace_advantage(behavior_logp, target_logp, rewards, values,
+                     bootstrap_value, done, *, gamma: float = 0.99,
+                     lam: float = 1.0, rho_bar: float = 1.0,
+                     c_bar: float = 1.0):
+    """adv*_t = vs_t - V(x_t): the lambda-discounted corrected advantage.
+
+    This is the series the algorithms' internal GAE is steered to reproduce;
+    at lam == 1 it coincides with the IMPALA pg advantage (rho == 1 regime).
+    """
+    vs, _ = vtrace(behavior_logp, target_logp, rewards, values,
+                   bootstrap_value, done, gamma=gamma, lam=lam,
+                   rho_bar=rho_bar, c_bar=c_bar)
+    return vs - values
+
+
+def gae_inverse(adv, values, bootstrap_value, done, *, gamma: float,
+                lam: float):
+    """Reward series r_hat with gae_scan(r_hat, values, ...) == adv, exactly.
+
+    GAE is lower-triangular in the rewards, so it inverts in closed form:
+        delta_hat_t = adv_t - gamma*lam*nd_t*adv_{t+1}
+        r_hat_t     = delta_hat_t - gamma*nd_t*v_{t+1} + v_t
+    """
+    nd = 1.0 - done.astype(values.dtype)
+    adv_next = jnp.concatenate(
+        [adv[1:], jnp.zeros_like(bootstrap_value)[None]], axis=0)
+    delta_hat = adv - gamma * lam * nd * adv_next
+    v_next = jnp.concatenate([values[1:], bootstrap_value[None]], axis=0)
+    return delta_hat - gamma * v_next * nd + values
+
+
+def vtrace_extras(algo, params, rollout, bootstrap_value, *,
+                  rho_bar: float = 1.0, c_bar: float = 1.0):
+    """BatchSpec extras implementing V-trace for rollout-mode algorithms.
+
+    Needs the pg-family algorithm surface: ``algo.apply`` -> (logits, value),
+    ``algo.dist``, ``algo.gamma``, ``algo.lam``, and the sampler-recorded
+    behavior log-prob in ``rollout.agent_info["logp"]``.  Returns extras that
+    override ``reward`` (and ``value`` where the spec consumes it, so PPO's
+    advantage/value-clip baselines come from the CURRENT learner params
+    rather than the stale actor).
+    """
+    logits, value = algo.apply(params, rollout.observation,
+                               rollout.prev_action, rollout.prev_reward)
+    value = jax.lax.stop_gradient(value)
+    target_logp = algo.dist.log_likelihood(rollout.action, logits)
+    behavior_logp = rollout.agent_info["logp"]
+    gamma = algo.gamma
+    lam = getattr(algo, "lam", 1.0)
+    adv = vtrace_advantage(behavior_logp, target_logp, rollout.reward,
+                           value, bootstrap_value, rollout.done,
+                           gamma=gamma, lam=lam, rho_bar=rho_bar, c_bar=c_bar)
+    extras = {"reward": gae_inverse(adv, value, bootstrap_value,
+                                    rollout.done, gamma=gamma, lam=lam)}
+    if "value" in algo.batch_spec.fields:
+        extras["value"] = value
+    return extras

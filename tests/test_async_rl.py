@@ -1,0 +1,324 @@
+"""Decoupled async actor/learner (paper §2.3) + V-trace correction tests.
+
+Covers: V-trace against a hand-built numpy reference on a stale batch, the
+GAE-inversion reward rewrite, staleness-0 equivalence of the async runner to
+the synchronous TrainLoop, replay-ratio throttle accounting, publication
+cadence/version bookkeeping, the new async telemetry, R2D1 stored-state
+alignment, and the two checkpoint/restore regressions (R2D1 honoring
+``restore``; buffer rehydration vs the missing-sidecar warning path).
+"""
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.envs import make_env
+from repro.agents import (make_categorical_pg_agent, make_dqn_agent,
+                          make_r2d1_agent)
+from repro.algos import A2C, DQN, R2D1
+from repro.algos.pg.gae import gae_scan
+from repro.core.distributions import Categorical
+from repro.models.rl_models import make_pg_mlp, make_q_mlp, make_recurrent_q
+from repro.runners import AsyncRunner, AsyncR2D1Runner
+from repro.runners.train_loop import TrainLoop, split_keys
+from repro.replay.host import (SequenceSamples, SequenceReplayBuffer,
+                               TransitionSamples, UniformReplayBuffer)
+from repro.samplers import SerialSampler
+from repro.train import vtrace as vt
+from repro.train.checkpoint import latest_step
+from repro.train.optim import adam
+from repro.utils.logger import Logger
+
+
+# ---------------------------------------------------------------------------
+# V-trace math
+# ---------------------------------------------------------------------------
+
+def _vtrace_reference(mu_logp, pi_logp, r, v, boot, done, gamma, lam,
+                      rho_bar, c_bar):
+    """Plain numpy loop transcribing the IMPALA recursion."""
+    T, B = r.shape
+    ratio = np.exp(pi_logp - mu_logp)
+    rho = np.minimum(ratio, rho_bar)
+    c = lam * np.minimum(ratio, c_bar)
+    nd = 1.0 - done.astype(np.float64)
+    v_next = np.concatenate([v[1:], boot[None]], 0)
+    vs = np.zeros((T, B))
+    acc = np.zeros(B)
+    for t in reversed(range(T)):
+        delta = rho[t] * (r[t] + gamma * v_next[t] * nd[t] - v[t])
+        acc = delta + gamma * c[t] * nd[t] * acc
+        vs[t] = v[t] + acc
+    vs_next = np.concatenate([vs[1:], boot[None]], 0)
+    pg_adv = rho * (r + gamma * vs_next * nd - v)
+    return vs, pg_adv
+
+
+def _stale_batch(seed=0, T=7, B=3):
+    rng = np.random.default_rng(seed)
+    mu_logp = rng.normal(-1.2, 0.4, (T, B))
+    pi_logp = mu_logp + rng.normal(0.0, 0.5, (T, B))  # genuinely off-policy
+    r = rng.normal(0, 1, (T, B))
+    v = rng.normal(0, 1, (T, B))
+    boot = rng.normal(0, 1, B)
+    done = rng.random((T, B)) < 0.2
+    return mu_logp, pi_logp, r, v, boot, done
+
+
+@pytest.mark.parametrize("rho_bar,c_bar,lam", [(1.0, 1.0, 1.0),
+                                               (1.0, 1.0, 0.9),
+                                               (0.8, 0.7, 0.95)])
+def test_vtrace_matches_reference_on_stale_batch(rho_bar, c_bar, lam):
+    mu, pi, r, v, boot, done = _stale_batch()
+    gamma = 0.97
+    ref_vs, ref_pg = _vtrace_reference(mu, pi, r, v, boot, done, gamma, lam,
+                                       rho_bar, c_bar)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    vs, pg = vt.vtrace(f32(mu), f32(pi), f32(r), f32(v), f32(boot),
+                       jnp.asarray(done), gamma=gamma, lam=lam,
+                       rho_bar=rho_bar, c_bar=c_bar)
+    np.testing.assert_allclose(vs, ref_vs, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(pg, ref_pg, rtol=1e-4, atol=1e-4)
+
+
+def test_vtrace_reduces_to_gae_on_policy():
+    """At pi == mu and rho_bar = c_bar = 1, vs - v is exactly GAE(lam) —
+    the identity behind the staleness-0 equivalence."""
+    mu, _, r, v, boot, done = _stale_batch(seed=3)
+    f32 = lambda x: jnp.asarray(x, jnp.float32)
+    mu, r, v, boot = f32(mu), f32(r), f32(v), f32(boot)
+    done = jnp.asarray(done)
+    for lam in (1.0, 0.9):
+        adv = vt.vtrace_advantage(mu, mu, r, v, boot, done, gamma=0.98,
+                                  lam=lam)
+        gae_adv, _ = gae_scan(r, v, boot, done, gamma=0.98, lam=lam)
+        np.testing.assert_allclose(adv, gae_adv, rtol=1e-5, atol=1e-5)
+    # at lam == 1 the pg advantage coincides with vs - v
+    vs, pg = vt.vtrace(mu, mu, r, v, boot, done, gamma=0.98, lam=1.0)
+    np.testing.assert_allclose(pg, vs - v, rtol=1e-4, atol=1e-4)
+
+
+def test_gae_inverse_roundtrip():
+    """gae_scan(gae_inverse(adv)) recovers adv — the exact seam that lets the
+    learner steer any algorithm's internal GAE to the V-trace targets."""
+    rng = np.random.default_rng(5)
+    T, B = 9, 4
+    adv = jnp.asarray(rng.normal(0, 2, (T, B)), jnp.float32)
+    v = jnp.asarray(rng.normal(0, 1, (T, B)), jnp.float32)
+    boot = jnp.asarray(rng.normal(0, 1, B), jnp.float32)
+    done = jnp.asarray(rng.random((T, B)) < 0.25)
+    for gamma, lam in ((0.99, 0.95), (0.9, 1.0)):
+        r_hat = vt.gae_inverse(adv, v, boot, done, gamma=gamma, lam=lam)
+        adv2, _ = gae_scan(r_hat, v, boot, done, gamma=gamma, lam=lam)
+        np.testing.assert_allclose(adv2, adv, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# runner fixtures
+# ---------------------------------------------------------------------------
+
+def _a2c_stack():
+    env = make_env("cartpole")
+    model = make_pg_mlp(4, 2)
+    agent = make_categorical_pg_agent(model)
+    algo = A2C(model.apply, adam(1e-3), distribution=Categorical(2),
+               gamma=0.99, gae_lambda=0.95)
+    sampler = SerialSampler(env, agent, n_envs=8, horizon=16)
+    return agent, algo, sampler
+
+
+def _dqn_stack():
+    env = make_env("cartpole")
+    model = make_q_mlp(4, 2)
+    agent = make_dqn_agent(model, 2)
+    algo = DQN(model.apply, adam(1e-3), double=True)
+    sampler = SerialSampler(env, agent, n_envs=8, horizon=16)
+    ex = TransitionSamples(observation=np.zeros(4, np.float32),
+                           action=np.int32(0), reward=np.float32(0),
+                           done=False, timeout=False)
+    return agent, algo, sampler, ex
+
+
+def test_async_staleness0_matches_sync_trainloop():
+    """Lockstep async A2C with V-trace ON equals the synchronous unfused
+    TrainLoop: at staleness 0 the correction is the identity."""
+    agent, algo, sampler = _a2c_stack()
+    N = 6
+    rng = jax.random.PRNGKey(7)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    params = agent.init_params(k1)
+
+    loop = TrainLoop(sampler, algo, fuse=False)
+    ts_sync = algo.init_train_state(k2, params)
+    ss_sync = sampler.init(k3, None)
+    keys = split_keys(rng, N)[1]
+    ts_sync = loop.run_window(ts_sync, ss_sync, None, keys)[0]
+
+    runner = AsyncRunner(sampler, algo, n_iterations=N, log_interval=3,
+                         threaded=False, publish_interval=1)
+    ts_async, _, _ = runner.run(jax.random.PRNGKey(7), params=params)
+
+    diffs = jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        ts_sync.params, ts_async.params))
+    assert max(diffs) < 1e-4, diffs
+    assert runner.stats["replay_ratio_actual"] == pytest.approx(1.0)
+
+
+def test_replay_ratio_throttle_accounting():
+    """consumption/generation never exceeds replay_ratio (paper: the
+    optimizer is throttled not to exceed it), and the updates count is
+    exactly consumed/batch_size."""
+    _, algo, sampler, ex = _dqn_stack()
+    buf = UniformReplayBuffer(ex, T_size=512, B=8, n_step=1)
+    ratio = 0.5
+    runner = AsyncRunner(sampler, algo, buf, batch_size=64,
+                         replay_ratio=ratio, min_replay=128, n_iterations=12,
+                         log_interval=6, threaded=False,
+                         agent_state_kwargs={"epsilon": 0.3})
+    runner.run(jax.random.PRNGKey(0))
+    generated = 12 * sampler.horizon * sampler.n_envs
+    actual = runner.stats["replay_ratio_actual"]
+    assert 0 < actual <= ratio + 1e-9
+    assert runner.stats["updates"] == int(actual * generated) // 64
+
+
+def test_publication_cadence_and_staleness(tmp_path):
+    """publish_interval=k publishes every k updates (version bookkeeping)
+    and produces measurable nonzero param staleness; k=1 keeps staleness 0
+    in the lockstep schedule."""
+    agent, algo, sampler = _a2c_stack()
+    rows = {}
+    for k in (1, 3):
+        logger = Logger(log_dir=str(tmp_path / f"pub{k}"), stream=open(
+            os.devnull, "w"), sinks=("console", "jsonl"))
+        runner = AsyncRunner(sampler, algo, n_iterations=6, log_interval=6,
+                             threaded=False, publish_interval=k,
+                             logger=logger)
+        runner.run(jax.random.PRNGKey(1))
+        assert runner.stats["publish_version"] == 6 // k
+        with open(tmp_path / f"pub{k}" / "progress.jsonl") as f:
+            rows[k] = [json.loads(l) for l in f][-1]
+    assert rows[1]["param_staleness_max"] == 0
+    # with cadence 3 the lockstep actor collects with params up to 2 updates
+    # behind the learner
+    assert rows[3]["param_staleness_max"] == 2
+    assert 0 < rows[3]["param_staleness_mean"] <= 2
+
+
+def test_threaded_runner_telemetry_and_no_recompiles(tmp_path):
+    """The genuinely decoupled schedule: all async telemetry present, nonzero
+    throughput, and zero steady-state recompiles on both programs."""
+    _, algo, sampler, ex = _dqn_stack()
+    buf = UniformReplayBuffer(ex, T_size=1024, B=8, n_step=1)
+    logger = Logger(log_dir=str(tmp_path), stream=open(os.devnull, "w"),
+                    sinks=("console", "jsonl"))
+    runner = AsyncRunner(sampler, algo, buf, batch_size=64, replay_ratio=1.0,
+                         min_replay=128, n_iterations=16, log_interval=4,
+                         threaded=True, publish_interval=2, logger=logger,
+                         agent_state_kwargs={"epsilon": 0.3})
+    ts, _, info = runner.run(jax.random.PRNGKey(0))
+    assert np.isfinite(float(info.loss))
+    assert runner.stats["samples_per_sec"] > 0
+    assert runner.stats["recompile_events"] == 0
+    assert runner.stats["updates"] > 0
+    with open(tmp_path / "progress.jsonl") as f:
+        row = [json.loads(l) for l in f][-1]
+    for key in ("param_staleness_mean", "param_staleness_max",
+                "publish_version", "db_occupancy", "queue_depth",
+                "actor_idle_frac", "learner_idle_frac", "overlap_frac"):
+        assert key in row, key
+    assert 0 <= row["db_occupancy"] <= 1
+    assert 0 <= row["actor_idle_frac"] <= 1
+
+
+# ---------------------------------------------------------------------------
+# R2D1 + checkpoint/restore regressions
+# ---------------------------------------------------------------------------
+
+def _r2d1_stack():
+    env = make_env("catch")
+    d = 32
+    model = make_recurrent_q(1, 3, conv=True, img_hw=(10, 5), d_lstm=d,
+                             channels=(8,), kernels=(3,), strides=(1,),
+                             d_conv_out=32)
+    agent = make_r2d1_agent(model, 3)
+    algo = R2D1(model.apply, adam(5e-4), burn_in=2, n_step=1, gamma=0.99,
+                target_update_interval=50)
+    sampler = SerialSampler(env, agent, n_envs=8, horizon=8)
+    obs0 = np.zeros((10, 5, 1), np.float32)
+    st0 = (np.zeros((d,), np.float32), np.zeros((d,), np.float32))
+    ex = SequenceSamples(observation=obs0, prev_action=np.int32(0),
+                         prev_reward=np.float32(0), action=np.int32(0),
+                         reward=np.float32(0), done=False, init_state=st0)
+
+    def mkbuf():
+        return SequenceReplayBuffer(ex, T_size=256, B=8, seq_len=16,
+                                    burn_in=2, state_interval=8)
+    return algo, sampler, mkbuf
+
+
+def test_r2d1_stored_state_alignment():
+    """horizon != state_interval must be rejected — otherwise stored initial
+    states would not line up with sampled sequence starts."""
+    algo, _, mkbuf = _r2d1_stack()
+    env = make_env("catch")
+    model = make_recurrent_q(1, 3, conv=True, img_hw=(10, 5), d_lstm=32,
+                             channels=(8,), kernels=(3,), strides=(1,),
+                             d_conv_out=32)
+    agent = make_r2d1_agent(model, 3)
+    bad_sampler = SerialSampler(env, agent, n_envs=8, horizon=4)
+    with pytest.raises(AssertionError, match="state_interval"):
+        AsyncR2D1Runner(bad_sampler, algo, mkbuf(), batch_size=8)
+
+
+def test_r2d1_unified_run_restores(tmp_path):
+    """Regression for the seed bug: AsyncR2D1Runner.run dropped restore /
+    ckpt_dir / ckpt_interval / start_iter.  Now both runner classes share one
+    run loop: a restored R2D1 run resumes at the saved iteration, rehydrates
+    the sequence buffer, and keeps checkpointing."""
+    algo, sampler, mkbuf = _r2d1_stack()
+    ck = str(tmp_path / "ck")
+    buf = mkbuf()
+    kw = dict(batch_size=8, replay_ratio=1.0, min_replay=128, log_interval=4,
+              threaded=False, ckpt_dir=ck, ckpt_interval=4,
+              agent_state_kwargs={"epsilon": 0.3})
+    r1 = AsyncR2D1Runner(sampler, algo, buf, n_iterations=8, **kw)
+    r1.run(jax.random.PRNGKey(0))
+    assert latest_step(ck) == 8       # seed code never checkpointed at all
+    assert os.path.exists(os.path.join(ck, "replay_00000008.npz"))
+    t_saved, filled_saved = buf.t, buf.filled
+
+    buf2 = mkbuf()
+    r2 = AsyncR2D1Runner(sampler, algo, buf2, n_iterations=12, **kw)
+    r2.run(jax.random.PRNGKey(1), restore=True)
+    # rehydration: the fresh buffer starts from the saved contents (8 iters
+    # x horizon 8 = 64 rows) and the resumed run appends 4 more iterations
+    assert filled_saved == 64
+    assert buf2.filled == min(filled_saved + 4 * 8, 256)
+    assert latest_step(ck) == 12      # restore resumed at iter 8, not 0
+
+
+def test_restore_missing_sidecar_warns(tmp_path):
+    """If the replay sidecar is gone, restore must warn and re-enforce the
+    min_replay warmup instead of silently optimizing an empty buffer."""
+    _, algo, sampler, ex = _dqn_stack()
+    ck = str(tmp_path / "ck")
+    kw = dict(batch_size=32, min_replay=128, log_interval=3, threaded=False,
+              ckpt_dir=ck, ckpt_interval=3,
+              agent_state_kwargs={"epsilon": 0.3})
+    b1 = UniformReplayBuffer(ex, T_size=512, B=8, n_step=1)
+    AsyncRunner(sampler, algo, b1, n_iterations=6, **kw).run(
+        jax.random.PRNGKey(0))
+    for fn in os.listdir(ck):
+        if fn.startswith("replay_"):
+            os.remove(os.path.join(ck, fn))
+    b2 = UniformReplayBuffer(ex, T_size=512, B=8, n_step=1)
+    r2 = AsyncRunner(sampler, algo, b2, n_iterations=9, **kw)
+    with pytest.warns(UserWarning, match="replay sidecar"):
+        r2.run(jax.random.PRNGKey(1), restore=True)
+    assert b2.filled > 0              # warmup refilled the buffer
+    assert latest_step(ck) == 9
