@@ -5,10 +5,16 @@ the exercise-every-algorithm benches, not score chasing.
 
 Also benches the TrainLoop dispatch modes: samples/sec with log_interval
 iterations fused into one lax.scan program vs. one jitted dispatch per
-iteration (``dispatch_fused_*`` / ``dispatch_periter_*`` rows)."""
+iteration (``dispatch_fused_*`` / ``dispatch_periter_*`` rows).Also benches the 2-D (data x model) LM-PPO train path (launch/train.py
+--mesh): fused-window samples/sec at 1x1 vs 2x2, compression off/on, plus
+the int8 error-feedback all-reduce payload accounting
+(``trainloop_2d_*`` rows, merge-written into BENCH_samplers.json)."""
 from __future__ import annotations
 
+import json
 import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -99,10 +105,142 @@ def _bench_dispatch(rows, *, window=20, reps=5):
                   ss, rs, 16 * 16)
 
 
+_MESH2D_BENCH = """
+import dataclasses, time, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.configs import get_smoke_config
+from repro.models import backbones as bb
+from repro.models import sharding as shd
+from repro.envs.token_lm import make_token_lm
+from repro.algos.pg.gae import gae_associative
+from repro.algos.pg.ppo import make_lm_ppo_train_step
+from repro.train.optim import adam, cross_replica, cross_replica_specs
+from repro.train.compress import wire_bytes
+from repro.launch.mesh import make_2d_mesh, install_2d
+from repro.launch.train import make_lm_rollout
+
+B, T, WINDOW, ITERS = 8, 8, 2, 3
+cfg = dataclasses.replace(get_smoke_config("gemma2-2b"), unroll=True)
+env = make_token_lm(vocab=cfg.vocab, episode_len=T)
+rng = jax.random.PRNGKey(0)
+
+def build_batch(traj, v_last):
+    adv, ret = gae_associative(traj["reward"], traj["value"], v_last,
+                               traj["done"], gamma=0.99, lam=0.95)
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    tm = lambda x: jnp.swapaxes(x, 0, 1)
+    return {"tokens": tm(traj["tokens"]), "actions": tm(traj["actions"]),
+            "logp_old": tm(traj["logp"]), "advantage": tm(adv),
+            "return_": tm(ret)}
+
+def bench(name, mesh_shape, compress):
+    params = bb.init_lm(rng, cfg)
+    if mesh_shape is None:
+        shd.set_global_mesh(None)
+        opt = adam(3e-4, grad_clip=1.0)
+        rollout = make_lm_rollout(cfg, env, B, T)
+        train_step = make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003,
+                                            unroll_micro=True)
+        def window(params, opt_state, ks):
+            for i in range(WINDOW):
+                traj, v_last = rollout(params, ks[i])
+                params, opt_state, m = train_step(params, opt_state,
+                                                  build_batch(traj, v_last))
+            return params, opt_state, m
+        fn = jax.jit(window)
+        opt_state = opt.init(params)
+    else:
+        n_data, n_model = mesh_shape
+        mesh = install_2d(make_2d_mesh(n_data, n_model))
+        pspecs = shd.param_pspecs(params, cfg)
+        params = jax.device_put(params, shd.make_shardings(pspecs, mesh))
+        opt = cross_replica(adam(3e-4, grad_clip=1.0), "data",
+                            compress=compress, ef_shards=n_data)
+        rollout = make_lm_rollout(cfg, env, B // n_data, T)
+        train_step = make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003,
+                                            param_pspecs=pspecs,
+                                            unroll_micro=True)
+        def window(params, opt_state, ks, sid):
+            for i in range(WINDOW):
+                traj, v_last = rollout(params,
+                                       jax.random.fold_in(ks[i], sid[0]))
+                params, opt_state, m = train_step(params, opt_state,
+                                                  build_batch(traj, v_last))
+            return params, opt_state, jax.lax.pmean(m["loss"], "data")
+        ts_spec = cross_replica_specs("data") if compress else P()
+        fn0 = jax.jit(shard_map(window, mesh=mesh,
+                                in_specs=(P(), ts_spec, P(), P("data")),
+                                out_specs=(P(), ts_spec, P()),
+                                check_rep=False, auto=frozenset({"model"})))
+        sid = jnp.arange(n_data, dtype=jnp.uint32)
+        fn = lambda p, o, ks: fn0(p, o, ks, sid)
+        opt_state = opt.init(params)
+    ks = jax.random.split(jax.random.PRNGKey(1), WINDOW)
+    p, o, m = fn(params, opt_state, ks)  # compile
+    jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        p, o, m = fn(p, o, ks)
+    jax.block_until_ready(jax.tree_util.tree_leaves(p)[0])
+    dt = (time.perf_counter() - t0) / ITERS
+    sps = B * T * WINDOW / dt
+    print(f"ROW,{name},{dt / WINDOW * 1e6:.1f},{sps:.0f}_steps_per_sec")
+    return params
+
+bench("trainloop_2d_fused_lmppo_1x1", None, None)
+bench("trainloop_2d_fused_lmppo_2x2", (2, 2), None)
+params = bench("trainloop_2d_fused_lmppo_2x2_int8ef", (2, 2), "int8_ef")
+wb = wire_bytes(params)
+print(f"ROW,trainloop_2d_int8ef_allreduce,0,"
+      f"{wb['bytes_saved']}_bytes_saved_per_step_{wb['ratio']:.2f}x")
+"""
+
+
+def _mesh2d_rows(n_devices: int = 4):
+    """LM-PPO fused window on the 2-D mesh, subprocess-forced devices (see
+    bench_samplers._sharded_rows for why XLA_FLAGS needs a subprocess)."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = os.path.join(repo, "src")
+    r = subprocess.run([sys.executable, "-c", _MESH2D_BENCH],
+                       capture_output=True, text=True, env=env, timeout=900)
+    if r.returncode != 0:
+        raise RuntimeError(f"mesh2d bench failed:\n{r.stdout}\n{r.stderr}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",")
+            rows.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+    return rows
+
+
+def _merge_json(rows, path=None):
+    """Merge (not overwrite) rows into BENCH_samplers.json — bench_samplers
+    owns the file and rewrites its own keys; these rows ride along (same
+    contract as bench_replay)."""
+    path = path or os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "BENCH_samplers.json")
+    out = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            out = json.load(fh)
+    for r in rows:
+        out[r["name"]] = {"us_per_call": r["us_per_call"],
+                          "derived": r["derived"]}
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
 def run():
     rows = []
     rng = jax.random.PRNGKey(0)
     _bench_dispatch(rows)
+    rows.extend(_mesh2d_rows())
+    _merge_json([r for r in rows if r["name"].startswith("trainloop_2d_")])
 
     # --- Fig 5 analogue: policy gradient on discrete control ---------------
     for name, algo_cls, kw in [

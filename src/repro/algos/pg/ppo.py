@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from ...core.algorithm import TrainState, OptInfo
 from ...core.batch_spec import BatchSpec
-from ...train.optim import Optimizer
+from ...train.optim import Optimizer, compress_metrics
 from .gae import gae_scan, gae_associative
 
 F32 = jnp.float32
@@ -229,6 +229,7 @@ def make_lm_ppo_train_step(cfg, optimizer: Optimizer, *,
         params2, opt_state2, gnorm = optimizer.update(grads, opt_state, params)
         metrics = {"loss": loss, "grad_norm": gnorm,
                    **jax.tree_util.tree_map(jnp.mean, auxes)}
+        metrics.update(compress_metrics(opt_state2))
         return params2, opt_state2, metrics
 
     return train_step

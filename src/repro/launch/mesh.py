@@ -37,7 +37,47 @@ def make_data_mesh(n_data: int = 0, axis: str = "data"):
     return jax.make_mesh((n,), (axis,))
 
 
-def split_actor_learner(devices=None):
+def make_2d_mesh(n_data: int = 0, n_model: int = 1,
+                 axes=("data", "model")):
+    """(data x model) mesh for model-parallel LM-scale PPO.
+
+    The 'data' axis is the gradient all-reduce axis (manual inside the
+    shard_map'd train step, so the reduction can route through the int8
+    error-feedback compressor); the 'model' axis shards LM backbone
+    params/activations through models/sharding.py rules (GSPMD 'auto' axis).
+    ``n_data=0`` infers the data extent from the local device count.
+    """
+    if n_model < 1:
+        raise ValueError(f"n_model must be >= 1, got {n_model}")
+    avail = jax.local_device_count()
+    n_data = n_data or max(avail // n_model, 1)
+    if n_data * n_model > avail:
+        raise ValueError(
+            f"mesh {n_data}x{n_model} needs {n_data * n_model} devices, "
+            f"host has {avail} (set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count=N for CPU tests)")
+    return jax.make_mesh((n_data, n_model), tuple(axes))
+
+
+def parse_mesh_arg(spec: str):
+    """'DxM' (e.g. '2x2', '1x4') -> (n_data, n_model); '1x1'/'' -> None."""
+    if not spec:
+        return None
+    parts = spec.lower().replace(",", "x").split("x")
+    if len(parts) != 2:
+        raise ValueError(f"mesh spec must be DATAxMODEL, got {spec!r}")
+    n_data, n_model = int(parts[0]), int(parts[1])
+    if n_data == n_model == 1:
+        return None
+    return n_data, n_model
+
+
+def mesh_devices(mesh) -> set:
+    """The device ids a mesh owns."""
+    return {d.id for d in mesh.devices.flat}
+
+
+def split_actor_learner(devices=None, *, mesh=None):
     """Disjoint device sets for the decoupled async runner (paper §2.3).
 
     Returns ``(actor_device, learner_device)``.  On a multi-device host the
@@ -46,8 +86,23 @@ def split_actor_learner(devices=None):
     stream; remaining devices stay free for a future sharded learner.  On a
     single-device host both share device 0 — the runner then relies on
     donated update buffers plus async dispatch to interleave the streams.
+
+    ``mesh``: a data/learner mesh that already owns devices (e.g. from
+    ``make_data_mesh``).  Actor and learner then pick from the devices the
+    mesh does NOT own, so the async programs never contend with the mesh'd
+    program for a compute stream.  Raises when the mesh owns every device —
+    sharing a shard_map'd device silently serializes both programs, which is
+    worse than failing loudly.
     """
     devs = list(devices) if devices is not None else list(jax.local_devices())
+    if mesh is not None:
+        owned = mesh_devices(mesh)
+        devs = [d for d in devs if d.id not in owned]
+        if not devs:
+            raise ValueError(
+                f"mesh owns all devices ({sorted(owned)}); shrink the mesh "
+                f"(make_data_mesh(n) with n < device count) to leave actor/"
+                f"learner devices free")
     if not devs:
         raise ValueError("no devices available")
     if len(devs) == 1:
@@ -63,6 +118,23 @@ def install(mesh):
     axes = mesh.axis_names
     dp = tuple(a for a in axes if a != "model")
     shd.set_global_mesh(mesh, dp_axes=dp, tp_axis="model")
+    return mesh
+
+
+def install_2d(mesh):
+    """Register a (data x model) mesh for the shard_map'd train path.
+
+    Unlike :func:`install`, the data axes are NOT registered as dp axes:
+    inside ``shard_map(..., auto={'model'})`` the batch dims are shard-local
+    (manual over 'data'), and a sharding constraint naming a manual axis is
+    an error — only the auto 'model' axis may appear in constraints.  Batch
+    specs therefore resolve to unsharded dims while param/activation rules
+    keep their model-axis sharding.
+    """
+    if mesh is None:
+        shd.set_global_mesh(None)
+        return None
+    shd.set_global_mesh(mesh, dp_axes=(), tp_axis="model")
     return mesh
 
 

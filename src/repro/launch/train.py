@@ -8,8 +8,15 @@ training path — the same train_step the multi-pod dry-run lowers.
 CPU-runnable at smoke scale:
   PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --smoke \
       --steps 50 --batch 16 --horizon 32
-On a pod, drop --smoke and pass --mesh single|multi (the launcher generates
-per-pod jax.distributed init; see launcher.py).
+
+2-D (data x model) mesh mode — model-parallel LM PPO with the gradient
+all-reduce over 'data' optionally routed through the int8 error-feedback
+compressor (train/compress.py):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --mesh 2x2 --compress --smoke
+``--mesh`` defaults to $REPRO_MESH so CI legs select it without editing
+commands.  On a pod, drop --smoke (the launcher generates per-pod
+jax.distributed init; see launcher.py).
 """
 from __future__ import annotations
 
@@ -72,6 +79,140 @@ def make_lm_rollout(cfg: ModelConfig, env, batch: int, horizon: int,
     return rollout
 
 
+def run_mesh(args, cfg, env, logger, tracer, rng, mesh_shape, shutdown):
+    """2-D (data x model) mesh driver.
+
+    'model' is a GSPMD auto axis: backbone params/activations shard through
+    models/sharding.py rules (param_pspecs at init, `constrain` calls in the
+    forward).  'data' is MANUAL inside the shard_map'd window: each data
+    shard runs its own rollout (decorrelated by fold_in(axis_index)) on a
+    local batch slice, and the gradient all-reduce is the explicit
+    cross_replica collective — which is exactly the hook that lets
+    --compress route it through the int8 error-feedback compressor.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..models import sharding as shd
+    from ..train.optim import cross_replica, cross_replica_specs
+    from ..train.compress import wire_bytes
+    from .mesh import make_2d_mesh, install_2d
+
+    n_data, n_model = mesh_shape
+    mesh = install_2d(make_2d_mesh(n_data, n_model))
+    # XLA's while-loop partitioner can't scan over auto-sharded xs inside a
+    # partial-auto shard_map (model-sharded CARRIES are fine; model-sharded
+    # stacked block params as scan xs abort with IsManualSubgroup) — unroll
+    # the layer stack so per-layer weights are slices of the sharded stack
+    cfg = dataclasses.replace(cfg, unroll=True)
+    if args.batch % n_data:
+        raise SystemExit(
+            f"--batch {args.batch} must divide by the data axis ({n_data})")
+    local_batch = args.batch // n_data
+    print(f"mesh {n_data}x{n_model} over ('data','model'), "
+          f"local batch {local_batch}, compress={args.compress or 'off'}")
+
+    k_init, rng = jax.random.split(rng)
+    params = bb.init_lm(k_init, cfg)
+    pspecs = shd.param_pspecs(params, cfg)
+    params = jax.device_put(params, shd.make_shardings(pspecs, mesh))
+    if args.compress:
+        wb = wire_bytes(params)
+        print(f"int8 all-reduce payload: {wb['int8_bytes']:,} B/step "
+              f"(fp32 {wb['fp32_bytes']:,} B, {wb['ratio']:.2f}x reduction)")
+
+    opt = cross_replica(adam(args.lr, grad_clip=1.0), "data",
+                        compress=args.compress, ef_shards=n_data)
+    opt_state = opt.init(params)
+    ts_spec = cross_replica_specs("data") if args.compress else P()
+
+    rollout = make_lm_rollout(cfg, env, local_batch, args.horizon)
+    # unroll_micro for the same reason as the layer unroll above: the
+    # microbatch-accumulation scan's grad body trips the partial-auto
+    # while-loop partitioner
+    train_step = make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003,
+                                        param_pspecs=pspecs,
+                                        unroll_micro=True)
+
+    def build_batch(traj, v_last):
+        # identical math to the serial path, shard-local: advantages are
+        # normalized over the LOCAL batch (documented semantic difference —
+        # the global batch is never materialized on one device)
+        adv, ret = gae_associative(traj["reward"], traj["value"], v_last,
+                                   traj["done"], gamma=0.99, lam=0.95)
+        adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+        tm = lambda x: jnp.swapaxes(x, 0, 1)
+        return {"tokens": tm(traj["tokens"]), "actions": tm(traj["actions"]),
+                "logp_old": tm(traj["logp"]), "advantage": tm(adv),
+                "return_": tm(ret)}
+
+    def window(params, opt_state, ks, sid):
+        # shard identity arrives as a P('data')-sharded iota: axis_index on a
+        # manual axis lowers to PartitionId, which the partial-auto (GSPMD
+        # 'model') partitioner refuses to place.  The window is a PYTHON loop
+        # (not lax.scan): model-sharded params as a while-loop carry trip the
+        # same partitioner limitation as the layer/microbatch scans — the
+        # window still compiles to ONE program, just unrolled.
+        me = sid[0]
+        metrics = {}
+        for i in range(ks.shape[0]):
+            traj, v_last = rollout(params, jax.random.fold_in(ks[i], me))
+            batch = build_batch(traj, v_last)
+            params, opt_state, metrics = train_step(params, opt_state, batch)
+            metrics = dict(metrics, avg_reward=jnp.mean(traj["reward"]))
+        metrics = {name: jax.lax.pmean(v, "data")
+                   for name, v in metrics.items()}
+        return params, opt_state, metrics
+
+    mesh_window = jax.jit(shard_map(
+        window, mesh=mesh,
+        in_specs=(P(), ts_spec, P(), P("data")),
+        out_specs=(P(), ts_spec, P()),
+        check_rep=False, auto=frozenset({"model"})))
+    tracer.watch_jit("lm.mesh_window", mesh_window)
+    shard_ids = jnp.arange(n_data, dtype=jnp.uint32)
+
+    from ..runners.train_loop import split_keys
+    start = 0
+    if args.restore and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), manifest = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state))
+        start = manifest["step"]
+        print(f"restored step {start}")
+
+    t0 = time.time()
+    step = start
+    while step < args.steps:
+        chunk = min(args.fuse_window, args.steps - step)
+        if args.ckpt_dir and args.ckpt_interval:
+            nxt = step + args.ckpt_interval - (step % args.ckpt_interval)
+            chunk = min(chunk, nxt - step)
+        rng, ks = split_keys(rng, chunk)
+        with tracer.span("mesh_window", step=step, iters=chunk):
+            params, opt_state, metrics = mesh_window(params, opt_state, ks,
+                                                     shard_ids)
+        step += chunk
+        sps = args.batch * args.horizon * chunk / max(time.time() - t0, 1e-9)
+        t0 = time.time()
+        row = {"avg_reward": float(metrics["avg_reward"]),
+               "loss": float(metrics["loss"]),
+               "entropy": float(metrics["entropy"]),
+               "samples_per_sec": sps}
+        if "compress_err_norm" in metrics:
+            row["compress_err_norm"] = float(metrics["compress_err_norm"])
+            row["grad_norm_shard_max"] = float(metrics["grad_norm_shard_max"])
+        with tracer.span("log", step=step):
+            logger.record(step, row)
+        tracer.poll_recompiles()
+        tracer.memory_snapshot(f"window_{step}")
+        if args.ckpt_dir and args.ckpt_interval and \
+                step % args.ckpt_interval == 0:
+            with tracer.span("checkpoint", step=step):
+                save_checkpoint(args.ckpt_dir, step, (params, opt_state))
+    shutdown()
+    return params
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma2-2b")
@@ -90,6 +231,16 @@ def main(argv=None):
                     help="compile this many (rollout + update) steps into ONE "
                          "lax.scan program (the runners' TrainLoop fusion); "
                          "logs/checkpoints land on window boundaries")
+    ap.add_argument("--mesh", default=os.environ.get("REPRO_MESH", ""),
+                    help="2-D mesh spec 'DATAxMODEL' (e.g. '2x2', '1x4'); "
+                         "'1x1'/'' runs the single-device path.  Defaults "
+                         "to $REPRO_MESH.  Requires DATA*MODEL local devices "
+                         "(CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--compress", nargs="?", const="int8_ef", default=None,
+                    choices=["int8_ef"],
+                    help="compress the data-axis gradient all-reduce "
+                         "(int8 + error feedback); requires --mesh")
     ap.add_argument("--kernels", default=None,
                     help="kernel backend spec (REPRO_KERNELS syntax: 'ref', "
                          "'interpret', 'attention=pallas,ssd=ref', ...); "
@@ -119,15 +270,6 @@ def main(argv=None):
     env = make_token_lm(vocab=cfg.vocab, episode_len=args.horizon)
     logger = Logger(args.log_dir)
     rng = jax.random.PRNGKey(args.seed)
-    k_init, rng = jax.random.split(rng)
-
-    params = bb.init_lm(k_init, cfg)
-    opt = adam(args.lr, grad_clip=1.0)
-    opt_state = opt.init(params)
-    rollout = jax.jit(make_lm_rollout(cfg, env, args.batch, args.horizon))
-    train_step = jax.jit(make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003))
-    tracer.watch_jit("lm.rollout", rollout)
-    tracer.watch_jit("lm.train_step", train_step)
 
     def _shutdown():
         tracer.poll_recompiles()
@@ -135,6 +277,23 @@ def main(argv=None):
         if profile_dir is not None:
             jax.profiler.stop_trace()
             print(f"profiler trace written to {profile_dir}")
+
+    from .mesh import parse_mesh_arg
+    mesh_shape = parse_mesh_arg(args.mesh)
+    if args.compress and mesh_shape is None:
+        ap.error("--compress requires --mesh DATAxMODEL (e.g. --mesh 2x2)")
+    if mesh_shape is not None:
+        return run_mesh(args, cfg, env, logger, tracer, rng, mesh_shape,
+                        _shutdown)
+
+    k_init, rng = jax.random.split(rng)
+    params = bb.init_lm(k_init, cfg)
+    opt = adam(args.lr, grad_clip=1.0)
+    opt_state = opt.init(params)
+    rollout = jax.jit(make_lm_rollout(cfg, env, args.batch, args.horizon))
+    train_step = jax.jit(make_lm_ppo_train_step(cfg, opt, entropy_coeff=0.003))
+    tracer.watch_jit("lm.rollout", rollout)
+    tracer.watch_jit("lm.train_step", train_step)
 
     start = 0
     if args.restore and args.ckpt_dir and latest_step(args.ckpt_dir) is not None:

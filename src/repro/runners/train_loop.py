@@ -53,7 +53,8 @@ from ..telemetry import sentinels as sentinels_mod
 from ..telemetry import trace
 from ..telemetry.sentinels import NonFiniteError
 from ..train.checkpoint import save_checkpoint
-from ..train.optim import Optimizer, cross_replica
+from ..train.optim import (Optimizer, CrossReplicaState, compress_metrics,
+                           cross_replica, cross_replica_specs)
 from ..utils.logger import Logger
 
 
@@ -90,6 +91,7 @@ class TrainLoop:
                  batch_size: Optional[int] = None,
                  updates_per_collect: int = 1, fuse: bool = True,
                  mesh=None, axis: str = "data",
+                 compress: Optional[str] = None,
                  sentinels: bool = False, nan_guard: bool = False):
         spec = algo.batch_spec
         if spec is None:
@@ -109,6 +111,10 @@ class TrainLoop:
         self.k = updates_per_collect
         self.fuse = fuse
         self.mesh, self.axis = mesh, axis
+        self.compress = compress
+        if compress and mesh is None:
+            raise ValueError("compress= needs a mesh (the compressed stage "
+                             "is the data-axis gradient all-reduce)")
         # in-program telemetry: sentinels ride the scan as extra stacked ys;
         # nan_guard implies them (the guard reads the nonfinite channel)
         self.nan_guard = nan_guard
@@ -136,7 +142,9 @@ class TrainLoop:
             self.algo = algo = copy.copy(algo)
             for name, val in list(vars(algo).items()):
                 if isinstance(val, Optimizer):
-                    setattr(algo, name, cross_replica(val, axis))
+                    setattr(algo, name, cross_replica(
+                        val, axis, compress=compress,
+                        ef_shards=self.n_shards))
         self._step = jax.jit(self._iteration)
         self._window = jax.jit(self._window_impl)
         # recompilation detector: every jitted entry point is watched; the
@@ -170,9 +178,14 @@ class TrainLoop:
         parameter math (bit-identity pinned in tests/test_telemetry.py)."""
         if not self.sentinels_on:
             return None
+        cm = compress_metrics(train_state.opt_state)
         return sentinels_mod.compute(prev_params, train_state.params,
                                      info.loss, info.grad_norm, replay_state,
-                                     env_steps)
+                                     env_steps,
+                                     compress_err_norm=cm.get(
+                                         "compress_err_norm"),
+                                     grad_norm_shard_max=cm.get(
+                                         "grad_norm_shard_max"))
 
     def _iteration(self, train_state, sampler_state, replay_state, rng):
         prev_params = train_state.params
@@ -242,9 +255,14 @@ class TrainLoop:
             return None
         local_steps = self.sampler.horizon * self.sampler.n_envs \
             // self.n_shards
+        cm = compress_metrics(train_state.opt_state)
         sent = sentinels_mod.compute(prev_params, train_state.params,
                                      info.loss, info.grad_norm, replay_state,
-                                     local_steps)
+                                     local_steps,
+                                     compress_err_norm=cm.get(
+                                         "compress_err_norm"),
+                                     grad_norm_shard_max=cm.get(
+                                         "grad_norm_shard_max"))
         return sentinels_mod.replicate(sent, self.axis)
 
     def _iteration_local(self, train_state, sampler_state, replay_state, rng):
@@ -304,16 +322,35 @@ class TrainLoop:
             rs = self.replay.merge_view(rs)
         return ts, ss, rs, infos, sents
 
-    def _build_sharded(self, sampler_state, replay_state):
+    def _train_state_spec(self, train_state):
+        """shard_map spec for the train state: P() (replicated) everywhere,
+        except compressed optimizers' EF residuals, which are sharded over
+        the data axis (each shard carries its own quantization error)."""
+        if not self.compress:
+            return P()
+        is_crs = lambda x: isinstance(x, CrossReplicaState)
+        spec = jax.tree_util.tree_map(
+            lambda x: cross_replica_specs(self.axis) if is_crs(x) else P(),
+            train_state, is_leaf=is_crs)
+        if not any(is_crs(x) for x in jax.tree_util.tree_leaves(
+                train_state, is_leaf=is_crs)):
+            raise ValueError(
+                "compress= is set but the train state carries no error-"
+                "feedback residual — initialize it through the loop's "
+                "wrapped algo: loop.algo.init_train_state(...)")
+        return spec
+
+    def _build_sharded(self, train_state, sampler_state, replay_state):
         ss_spec = self.sampler.state_spec(sampler_state)
+        ts_spec = self._train_state_spec(train_state)
         if self.spec.on_policy:
             def window(ts, ss, keys):
                 ts, ss, _, infos, sents = self._sharded_window_impl(
                     ts, ss, None, keys)
                 return ts, ss, infos, sents
             f = shard_map(window, mesh=self.mesh,
-                          in_specs=(P(), ss_spec, P()),
-                          out_specs=(P(), ss_spec, P(), P()),
+                          in_specs=(ts_spec, ss_spec, P()),
+                          out_specs=(ts_spec, ss_spec, P(), P()),
                           check_rep=False)
         else:
             rs_spec = self.replay.shard_spec(self.axis)
@@ -321,8 +358,8 @@ class TrainLoop:
             def window(ts, ss, rs, keys):
                 return self._sharded_window_impl(ts, ss, rs, keys)
             f = shard_map(window, mesh=self.mesh,
-                          in_specs=(P(), ss_spec, rs_spec, P()),
-                          out_specs=(P(), ss_spec, rs_spec, P(), P()),
+                          in_specs=(ts_spec, ss_spec, rs_spec, P()),
+                          out_specs=(ts_spec, ss_spec, rs_spec, P(), P()),
                           check_rep=False)
         self._sharded_window = jax.jit(f)
         self.tracer.watch_jit("train_loop.sharded_window",
@@ -330,7 +367,7 @@ class TrainLoop:
 
     def _call_sharded(self, train_state, sampler_state, replay_state, keys):
         if self._sharded_window is None:
-            self._build_sharded(sampler_state, replay_state)
+            self._build_sharded(train_state, sampler_state, replay_state)
         if self.spec.on_policy:
             ts, ss, infos, sents = self._sharded_window(
                 train_state, sampler_state, keys)

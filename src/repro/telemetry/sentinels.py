@@ -44,6 +44,10 @@ class Sentinels(NamedTuple):
     replay_priority_mass: Any   # sum-tree root (total priority mass)
     replay_priority_max: Any    # max leaf priority
     env_steps: Any          # env steps generated this iteration
+    # compression health (0 when the gradient reduction is uncompressed):
+    compress_err_norm: Any      # EF residual global norm after the update
+    grad_norm_shard_max: Any    # per-axis: max over data shards of the
+    #                             pre-reduction local grad norm
 
 
 class NonFiniteError(RuntimeError):
@@ -70,7 +74,8 @@ def count_nonfinite(tree) -> jnp.ndarray:
 
 
 def compute(prev_params, new_params, loss, grad_norm, replay_state,
-            env_steps: int) -> Sentinels:
+            env_steps: int, compress_err_norm=None,
+            grad_norm_shard_max=None) -> Sentinels:
     """Build one iteration's sentinels (pure jnp; callable inside scan).
 
     ``replay_state`` is a device ``ReplayState`` (local view under SPMD) or
@@ -103,6 +108,10 @@ def compute(prev_params, new_params, loss, grad_norm, replay_state,
         replay_priority_mass=mass,
         replay_priority_max=pmax,
         env_steps=jnp.asarray(env_steps, jnp.int32),
+        compress_err_norm=jnp.asarray(
+            0.0 if compress_err_norm is None else compress_err_norm, F32),
+        grad_norm_shard_max=jnp.asarray(
+            gn if grad_norm_shard_max is None else grad_norm_shard_max, F32),
     )
 
 
@@ -123,6 +132,11 @@ def replicate(s: Sentinels, axis: str) -> Sentinels:
         replay_priority_mass=jax.lax.psum(s.replay_priority_mass, axis),
         replay_priority_max=jax.lax.pmax(s.replay_priority_max, axis),
         env_steps=jax.lax.psum(s.env_steps, axis),
+        # already reduced over the compressed axis inside cross_replica
+        # (psum/pmax there), so they arrive replicated: pmean/pmax are no-ops
+        # that keep the out-spec honest
+        compress_err_norm=jax.lax.pmean(s.compress_err_norm, axis),
+        grad_norm_shard_max=jax.lax.pmax(s.grad_norm_shard_max, axis),
     )
 
 
@@ -149,6 +163,8 @@ def summarize(stacked: Sentinels) -> dict:
         "sent_priority_max": float(s.replay_priority_max[-1]),
         "sent_env_steps": int(s.env_steps.sum()),
         "sent_window_iters": int(n),
+        "sent_compress_err_norm": float(s.compress_err_norm[-1]),
+        "sent_grad_norm_shard_max": float(s.grad_norm_shard_max[-1]),
     }
 
 

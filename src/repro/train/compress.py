@@ -30,10 +30,19 @@ def init_ef(grads_like) -> EFState:
 
 
 def ef_quantize(x, residual):
-    """(x + residual) -> (int8 q, scale, new_residual)."""
+    """(x + residual) -> (int8 q, scale, new_residual).
+
+    Roundtrip bound: |(x + residual) - q*scale| <= scale elementwise.  A
+    non-finite input poisons the SCALE (nan): the int8 cast of nan/inf is
+    finite garbage, so without this the dequantized grads would silently go
+    plausible-looking — instead deq and the carried residual both go nan and
+    the nan_guard sentinel fires downstream.
+    """
     comp = x.astype(F32) + residual
-    scale = jnp.maximum(jnp.max(jnp.abs(comp)), 1e-12) / INT8_MAX
+    amax = jnp.max(jnp.abs(comp))
+    scale = jnp.maximum(amax, 1e-12) / INT8_MAX
     q = jnp.clip(jnp.round(comp / scale), -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    scale = jnp.where(jnp.isfinite(amax), scale, jnp.float32(jnp.nan))
     deq = q.astype(F32) * scale
     return q, scale, comp - deq
 
@@ -51,14 +60,17 @@ def cross_pod_allreduce(grads, ef: EFState, *, axis: str = "pod") -> tuple:
     """
     def one(g, r):
         q, scale, new_r = ef_quantize(g, r)
-        # sum of per-pod dequantized tensors; scale differs per pod, so send
-        # (q * scale) contributions via psum on the dequantized int8 value.
-        # Payload stays int8-sized on the wire in a real ICI lowering; XLA's
-        # psum here models the arithmetic, bytes are counted by the roofline
-        # as int8 (see benchmarks/collectives.py).
-        summed = jax.lax.psum(q.astype(jnp.bfloat16) * scale.astype(jnp.bfloat16), axis)
+        # sum of per-pod dequantized tensors; scale differs per pod, so each
+        # pod contributes q*scale and the psum models the receiver-side f32
+        # dequantize-and-accumulate.  The dequantize MUST be f32 — the EF
+        # residual compensates the f32 deq (ef_quantize), so a lower-precision
+        # wire value would apply an update the residual never sees and the
+        # telescoping guarantee (sum applied -> sum true grads) would break.
+        # Payload stays int8-sized on the wire in a real ICI lowering; bytes
+        # are counted by the roofline as int8 (see benchmarks/collectives.py).
+        summed = jax.lax.psum(q.astype(F32) * scale, axis)
         n = jax.lax.psum(jnp.ones((), F32), axis)
-        return summed.astype(F32) / n, new_r
+        return summed / n, new_r
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)
     flat_r = jax.tree_util.tree_leaves(ef.residual)
@@ -66,3 +78,17 @@ def cross_pod_allreduce(grads, ef: EFState, *, axis: str = "pod") -> tuple:
     new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
     new_r = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
     return new_g, EFState(residual=new_r)
+
+
+def wire_bytes(grads_like) -> dict:
+    """Per-step all-reduce payload accounting for one gradient tree: fp32
+    baseline vs the int8 path (1 byte/element + one fp32 scale per tensor).
+    Used by the benches to report bytes-reduced-per-step; the roofline
+    counts the same terms (benchmarks/collectives accounting)."""
+    leaves = jax.tree_util.tree_leaves(grads_like)
+    n_elems = sum(int(l.size) for l in leaves)
+    fp32 = 4 * n_elems
+    int8 = n_elems + 4 * len(leaves)
+    return {"fp32_bytes": fp32, "int8_bytes": int8,
+            "bytes_saved": fp32 - int8,
+            "ratio": fp32 / max(int8, 1)}

@@ -12,6 +12,9 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .compress import EFState, cross_pod_allreduce
 
 F32 = jnp.float32
 
@@ -20,6 +23,17 @@ class OptState(NamedTuple):
     step: jnp.ndarray
     mu: Any
     nu: Any
+
+
+class CrossReplicaState(NamedTuple):
+    """State of a compressed cross_replica optimizer: the wrapped optimizer's
+    state plus the error-feedback residual (one per shard of the compressed
+    axis — leaves carry a leading shard dim, locally 1 inside shard_map) and
+    two replicated health scalars the telemetry sentinels read."""
+    inner: Any
+    ef: EFState
+    shard_grad_norm: jnp.ndarray   # pmax over shards of pre-reduce grad norm
+    ef_err_norm: jnp.ndarray       # global Frobenius norm of the residual
 
 
 class Optimizer(NamedTuple):
@@ -136,8 +150,9 @@ def sgd(lr, momentum: float = 0.0, grad_clip: Optional[float] = None) -> Optimiz
     return Optimizer(init, update)
 
 
-def cross_replica(opt: Optimizer, axis: str) -> Optimizer:
-    """Data-parallel wrapper: pmean grads over ``axis`` before the inner
+def cross_replica(opt: Optimizer, axis, *, compress: Optional[str] = None,
+                  ef_shards: int = 1) -> Optimizer:
+    """Data-parallel wrapper: all-reduce grads over ``axis`` before the inner
     update (paper §2.4 synchronous multi-GPU — "gradients all-reduced").
 
     Because every loss in the repo is a mean over its (shard-local) batch,
@@ -145,17 +160,94 @@ def cross_replica(opt: Optimizer, axis: str) -> Optimizer:
     so the wrapped update — run replicated inside ``shard_map`` — is the
     SAME update the serial loop takes on the full batch.  Clipping and the
     reported grad norm see the reduced grads, matching serial semantics.
-    Idempotent: wrapping twice over the same axis is a no-op.
+    Idempotent: wrapping twice with the same (axis, compress) is a no-op.
+
+    ``axis`` may be a tuple of mesh axis names: with ``compress=None`` the
+    pmean spans all of them in one collective; with ``compress="int8_ef"``
+    the reduction grows a SECOND stage — full-precision pmean over the inner
+    axes (``axis[1:]``, the in-pod links), then int8 error-feedback
+    all-reduce (train/compress.py cross_pod_allreduce) over the outermost
+    axis (the scarce cross-pod links).  A single ``axis`` string with
+    compression routes the whole reduction through the compressor — the
+    (data x model) LM mesh case, where 'data' IS the cross-pod axis.
+
+    Compression carries state: the returned optimizer's ``init`` wraps the
+    inner state in :class:`CrossReplicaState` holding the per-shard EF
+    residual.  ``ef_shards`` sizes the residual's leading shard dim — pass
+    the extent of the compressed axis so each shard of a ``shard_map`` owns
+    one residual slice (in/out specs from :func:`cross_replica_specs`).
     """
-    if getattr(opt.update, "_cross_replica_axis", None) == axis:
+    tag = (tuple(axis) if not isinstance(axis, str) else axis, compress)
+    if getattr(opt.update, "_cross_replica_axis", None) == tag:
         return opt
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
 
-    def update(grads, state, params):
-        grads = jax.tree_util.tree_map(lambda g: jax.lax.pmean(g, axis), grads)
-        return opt.update(grads, state, params)
+    if compress is None:
+        def update(grads, state, params):
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, axes), grads)
+            return opt.update(grads, state, params)
 
-    update._cross_replica_axis = axis
-    return Optimizer(opt.init, update)
+        update._cross_replica_axis = tag
+        return Optimizer(opt.init, update)
+
+    if compress != "int8_ef":
+        raise ValueError(f"unknown compress mode {compress!r} "
+                         f"(supported: 'int8_ef')")
+    outer, inner_axes = axes[0], axes[1:]
+
+    def init(params):
+        residual = jax.tree_util.tree_map(
+            lambda p: jnp.zeros((ef_shards,) + p.shape, F32), params)
+        return CrossReplicaState(
+            inner=opt.init(params), ef=EFState(residual=residual),
+            shard_grad_norm=jnp.zeros((), F32),
+            ef_err_norm=jnp.zeros((), F32))
+
+    def update(grads, state: CrossReplicaState, params):
+        if inner_axes:  # stage 1: full-precision in-pod reduction
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.pmean(g, inner_axes), grads)
+        local_norm = global_norm(grads)
+        # stage 2: int8 + error feedback over the outermost (cross-pod) axis;
+        # the residual's leading shard dim is 1 in the local view
+        res = jax.tree_util.tree_map(lambda r: r[0], state.ef.residual)
+        grads, ef = cross_pod_allreduce(grads, EFState(residual=res),
+                                        axis=outer)
+        res_new = jax.tree_util.tree_map(lambda r: r[None], ef.residual)
+        err_sq = sum(jnp.sum(jnp.square(l))
+                     for l in jax.tree_util.tree_leaves(ef.residual))
+        new_params, inner_state, gnorm = opt.update(grads, state.inner, params)
+        new_state = CrossReplicaState(
+            inner=inner_state, ef=EFState(residual=res_new),
+            shard_grad_norm=jax.lax.pmax(local_norm, outer),
+            ef_err_norm=jnp.sqrt(jax.lax.psum(err_sq, outer)))
+        return new_params, new_state, gnorm
+
+    update._cross_replica_axis = tag
+    return Optimizer(init, update)
+
+
+def cross_replica_specs(axis: str) -> CrossReplicaState:
+    """shard_map in/out spec prefix for a CrossReplicaState: the EF residual
+    is sharded over ``axis`` (one slice per shard), everything else
+    replicated."""
+    return CrossReplicaState(inner=P(), ef=EFState(residual=P(axis)),
+                             shard_grad_norm=P(), ef_err_norm=P())
+
+
+def compress_metrics(opt_state) -> dict:
+    """Compression-health scalars from any pytree holding CrossReplicaState
+    nodes: residual norm (summed in quadrature over multiple optimizers) and
+    max pre-reduce shard grad norm.  {} when nothing is compressed."""
+    states = [s for s in jax.tree_util.tree_leaves(
+        opt_state, is_leaf=lambda x: isinstance(x, CrossReplicaState))
+        if isinstance(s, CrossReplicaState)]
+    if not states:
+        return {}
+    err = jnp.sqrt(sum(jnp.square(s.ef_err_norm) for s in states))
+    shard = jnp.max(jnp.stack([s.shard_grad_norm for s in states]))
+    return {"compress_err_norm": err, "grad_norm_shard_max": shard}
 
 
 def soft_update(target, online, tau: float):
